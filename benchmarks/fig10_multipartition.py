@@ -1,0 +1,45 @@
+"""Fig. 10 analogue: PAT vs TStream under multi-partition transactions (GS)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import ALL_APPS
+
+from .common import throughput_model
+
+WIDTH = 40
+
+
+def run(quick: bool = True):
+    n_events = 300 if quick else 1000
+    app = ALL_APPS["gs"]
+    rows = []
+    n_partitions = 16
+    for mp_ratio in [0.0, 0.25, 0.5, 0.75, 1.0]:
+        rng = np.random.default_rng(10)
+        store = app.make_store()
+        events = {k: jnp.asarray(v) for k, v in app.gen_events(
+            rng, n_events, n_partitions=n_partitions, mp_ratio=mp_ratio,
+            mp_len=6).items()}
+        res = throughput_model(app, store, events, ["tstream", "pat"],
+                               [WIDTH], n_partitions=n_partitions)
+        for scheme, d in res.items():
+            rows.append(dict(fig="fig10a", app="gs", scheme=scheme,
+                             mp_ratio=mp_ratio,
+                             events_per_s=d["by_width"][WIDTH],
+                             rounds=d["rounds"]))
+    for mp_len in [2, 4, 6, 8, 10]:
+        rng = np.random.default_rng(11)
+        store = app.make_store()
+        events = {k: jnp.asarray(v) for k, v in app.gen_events(
+            rng, n_events, n_partitions=n_partitions, mp_ratio=0.5,
+            mp_len=mp_len).items()}
+        res = throughput_model(app, store, events, ["tstream", "pat"],
+                               [WIDTH], n_partitions=n_partitions)
+        for scheme, d in res.items():
+            rows.append(dict(fig="fig10b", app="gs", scheme=scheme,
+                             mp_len=mp_len,
+                             events_per_s=d["by_width"][WIDTH],
+                             rounds=d["rounds"]))
+    return rows

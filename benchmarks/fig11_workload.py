@@ -1,0 +1,40 @@
+"""Fig. 11 analogue: read-ratio and key-skew sensitivity (GS)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import ALL_APPS
+
+from .common import throughput_model
+
+WIDTH = 40
+SCHEMES = ["tstream", "lock", "mvlk", "pat"]
+
+
+def run(quick: bool = True):
+    n_events = 300 if quick else 1000
+    app = ALL_APPS["gs"]
+    rows = []
+    for read_ratio in [0.0, 0.25, 0.5, 0.75, 1.0]:
+        rng = np.random.default_rng(12)
+        store = app.make_store()
+        events = {k: jnp.asarray(v) for k, v in app.gen_events(
+            rng, n_events, theta=0.0, read_ratio=read_ratio).items()}
+        res = throughput_model(app, store, events, SCHEMES, [WIDTH])
+        for scheme, d in res.items():
+            rows.append(dict(fig="fig11a", app="gs", scheme=scheme,
+                             read_ratio=read_ratio,
+                             events_per_s=d["by_width"][WIDTH]))
+    for theta in [0.0, 0.4, 0.8, 1.2]:
+        rng = np.random.default_rng(13)
+        store = app.make_store()
+        events = {k: jnp.asarray(v) for k, v in app.gen_events(
+            rng, n_events, theta=theta, read_ratio=0.0).items()}
+        res = throughput_model(app, store, events, SCHEMES, [WIDTH])
+        for scheme, d in res.items():
+            rows.append(dict(fig="fig11b", app="gs", scheme=scheme,
+                             theta=theta,
+                             events_per_s=d["by_width"][WIDTH],
+                             max_chain=d["max_chain"]))
+    return rows

@@ -1,0 +1,34 @@
+"""Fig. 13 analogue: 99th-pct end-to-end latency per scheme (interval 500)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import ALL_APPS
+
+from .common import engine_stats, modeled_time
+
+WIDTH = 40
+INTERVAL = 500
+SCHEMES = ["tstream", "lock", "mvlk", "pat"]
+
+
+def run(quick: bool = True):
+    rows = []
+    for name in (["gs", "sl"] if quick else list(ALL_APPS)):
+        app = ALL_APPS[name]
+        rng = np.random.default_rng(15)
+        store = app.make_store()
+        events = {k: jnp.asarray(v)
+                  for k, v in app.gen_events(rng, INTERVAL).items()}
+        stats_l, secs_l, _ = engine_stats(app, store, events, "lock")
+        t_op = secs_l / max(float(stats_l.rounds), 1.0)
+        for scheme in SCHEMES:
+            stats, secs, _ = engine_stats(app, store, events, scheme)
+            t_batch = modeled_time(stats, scheme, WIDTH, INTERVAL, t_op)
+            tput = INTERVAL / t_batch
+            fill = INTERVAL / max(tput, 1e-9)
+            rows.append(dict(fig="fig13", app=name, scheme=scheme,
+                             p99_latency_s=0.99 * fill + t_batch,
+                             events_per_s=tput))
+    return rows

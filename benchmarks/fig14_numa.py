@@ -1,0 +1,25 @@
+"""Fig. 14 analogue: NUMA-aware configurations -> chain-shard layouts.
+
+Runs in a subprocess (the layouts need an 8-device placeholder mesh while
+the rest of the suite sees the real single device)."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+
+def run(quick: bool = True):
+    worker = os.path.join(os.path.dirname(__file__), "fig14_numa_worker.py")
+    proc = subprocess.run([sys.executable, worker], capture_output=True,
+                          text=True, timeout=900)
+    if proc.returncode != 0:
+        return [dict(fig="fig14", error=proc.stderr[-500:])]
+    data = json.loads(proc.stdout.strip().splitlines()[-1])
+    rows = []
+    for layout, d in data.items():
+        rows.append(dict(fig="fig14", app="gs", layout=layout,
+                         correct=d["correct"], wall_s=d["wall_s"],
+                         wire_bytes_per_device=d["wire_bytes_per_device"]))
+    return rows

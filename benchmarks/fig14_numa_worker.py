@@ -1,0 +1,62 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+"""Fig. 14 worker (subprocess: needs 8 placeholder devices).
+
+Compiles the TStream engine under the three chain-shard layouts on a
+(socket=2, core=4) mesh, verifies results against the oracle, and prints
+per-layout collective bytes + measured wall time as JSON.
+"""
+import dataclasses
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.apps import GS                                    # noqa: E402
+from repro.core.blotter import build_opbatch                 # noqa: E402
+from repro.core.engines import evaluate                      # noqa: E402
+from repro.core.sharded import LAYOUTS, evaluate_sharded     # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo            # noqa: E402
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("socket", "core"))
+    rng = np.random.default_rng(14)
+    store = GS.make_store()
+    events = {k: jnp.asarray(v) for k, v in GS.gen_events(rng, 512).items()}
+    ops, _ = build_opbatch(GS, store, events, jnp.int32(0))
+
+    _, oracle_vals, _ = evaluate(store, ops, GS.funs, "lock")
+    oracle = np.asarray(oracle_vals)[:-1]
+
+    out = {}
+    for layout in LAYOUTS:
+        with mesh:
+            fn = jax.jit(lambda o: evaluate_sharded(store, o, GS.funs,
+                                                    mesh, layout))
+            lowered = fn.lower(ops)
+            compiled = lowered.compile()
+            res = analyze_hlo(compiled.as_text(), mesh.size)
+            vals = np.asarray(jax.block_until_ready(fn(ops)))
+            import time
+            t0 = time.perf_counter()
+            for _ in range(3):
+                jax.block_until_ready(fn(ops))
+            secs = (time.perf_counter() - t0) / 3
+        ok = bool(np.allclose(vals, oracle, rtol=1e-4, atol=1e-4))
+        out[layout] = dict(
+            correct=ok,
+            wall_s=secs,
+            coll_bytes=res["coll_bytes"],
+            wire_bytes_per_device=res["wire_bytes_per_device"],
+        )
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

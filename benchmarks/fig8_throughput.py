@@ -1,0 +1,30 @@
+"""Fig. 8 analogue: throughput per application × scheme × executor width."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import ALL_APPS
+
+from .common import throughput_model
+
+SCHEMES = ["tstream", "lock", "mvlk", "pat", "nolock"]
+WIDTHS = [1, 2, 4, 8, 16, 32, 40]
+
+
+def run(quick: bool = True):
+    n_events = 500 if quick else 2000
+    rows = []
+    for name, app in ALL_APPS.items():
+        rng = np.random.default_rng(8)
+        store = app.make_store()
+        events = {k: jnp.asarray(v)
+                  for k, v in app.gen_events(rng, n_events).items()}
+        res = throughput_model(app, store, events, SCHEMES, WIDTHS)
+        for scheme, d in res.items():
+            for w, tput in d["by_width"].items():
+                rows.append(dict(fig="fig8", app=name, scheme=scheme,
+                                 width=w, events_per_s=tput,
+                                 measured_1dev_s=d["measured_1dev_s"],
+                                 rounds=d["rounds"]))
+    return rows

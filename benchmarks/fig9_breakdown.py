@@ -1,0 +1,48 @@
+"""Fig. 9 analogue: transaction-processing time breakdown (SL).
+
+Components measured on-device: restructure (sort/segment = the paper's
+'Lock'-insertion analogue), evaluation (Useful), and the residual
+(Sync/Others: mode-switch barriers become phase boundaries; their cost is
+the difference between the full step and its parts)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import ALL_APPS
+from repro.core.blotter import build_opbatch
+from repro.core.engines import evaluate
+from repro.core.restructure import restructure
+
+from .common import wall_time
+
+
+def run(quick: bool = True):
+    n_events = 500 if quick else 2000
+    app = ALL_APPS["sl"]
+    rng = np.random.default_rng(9)
+    store = app.make_store()
+    events = {k: jnp.asarray(v)
+              for k, v in app.gen_events(rng, n_events).items()}
+    ops, _ = build_opbatch(app, store, events, jnp.int32(0))
+
+    t_restruct = wall_time(jax.jit(
+        lambda o: restructure(o, store.pad_uid)[1].seg_id), ops)
+
+    rows = []
+    for scheme in ["tstream", "lock", "mvlk", "pat"]:
+        def full(values, o):
+            st = dataclasses.replace(store, values=values)
+            return evaluate(st, o, app.funs, scheme,
+                            associative_only=app.associative_only,
+                            has_gates=app.has_gates)[1]
+        t_full = wall_time(jax.jit(full), store.values, ops)
+        restruct = t_restruct if scheme.startswith(("tstream", "mvlk", "pat")) \
+            else 0.0
+        rows.append(dict(fig="fig9", app="sl", scheme=scheme,
+                         total_s=t_full, restructure_s=restruct,
+                         useful_s=max(t_full - restruct, 0.0)))
+    return rows

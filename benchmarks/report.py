@@ -1,0 +1,71 @@
+"""Emit EXPERIMENTS.md tables from dry-run/bench JSONs.
+
+  PYTHONPATH=src python -m benchmarks.report [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from .roofline import (HBM_BW, LINK_BW, PEAK_FLOPS, load_cells, model_flops,
+                       roofline_row)
+
+
+def dryrun_table(dryrun_dir: str, multi_pod: bool) -> str:
+    lines = ["| arch | shape | compile s | FLOPs/dev | bytes/dev | wire/dev "
+             "| GB/dev | fits 16G |",
+             "|---|---|---|---|---|---|---|---|"]
+    for rec in load_cells(dryrun_dir):
+        if rec.get("multi_pod") != multi_pod:
+            continue
+        if rec.get("skipped"):
+            lines.append(f"| {rec['arch']} | {rec['shape']} | skip | — | — "
+                         f"| — | — | ({rec['reason']}) |")
+            continue
+        if rec.get("error"):
+            lines.append(f"| {rec['arch']} | {rec['shape']} | ERROR | | | "
+                         f"| | {rec['error'][:60]} |")
+            continue
+        gb = (rec["mem"]["argument_bytes"] + rec["mem"]["temp_bytes"]) / 2**30
+        fits = "yes" if gb <= 16 else f"no ({gb:.0f} GB)"
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['compile_s']:.0f} "
+            f"| {rec['hlo_flops']:.2e} | {rec['hlo_bytes_written']:.2e} "
+            f"| {rec['wire_bytes_per_device']:.2e} | {gb:.1f} | {fits} |")
+    return "\n".join(lines)
+
+
+def roofline_table_md(dryrun_dir: str) -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "bottleneck | 6ND/HLO | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for rec in load_cells(dryrun_dir):
+        if rec.get("multi_pod"):
+            continue
+        r = roofline_row(rec)
+        if not r:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} "
+            f"| {r['memory_s']:.3f} | {r['collective_s']:.3f} "
+            f"| **{r['bottleneck']}** | {r['useful_ratio']:.3f} "
+            f"| {r['roofline_frac']:.4f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    print("## Single-pod (16×16) dry-run\n")
+    print(dryrun_table(args.dir, False))
+    print("\n## Multi-pod (2×16×16) dry-run\n")
+    print(dryrun_table(args.dir, True))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table_md(args.dir))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""§Roofline: three-term roofline per (arch × shape × mesh) from the
+dry-run JSONs (results/dryrun/*.json).
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs        (197 TF/s bf16)
+  memory     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+  collective = wire_bytes_per_device / link_bw          (~50 GB/s ICI)
+
+HLO_FLOPs/bytes are trip-count-weighted per-device figures (see
+launch/hlo_analysis.py — XLA's cost_analysis counts loop bodies once).
+MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for train; 2·N·D_tokens
+for prefill/decode forward passes.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s
+LINK_BW = 50e9           # bytes/s per ICI link
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,        # one token per sequence
+    "long_500k": 1,
+}
+
+
+def model_flops(rec: dict) -> float:
+    """Global model FLOPs for the cell (6ND train, 2ND forward)."""
+    tokens = SHAPE_TOKENS[rec["shape"]]
+    n = rec["active_params"]
+    mult = 6.0 if rec["shape"] == "train_4k" else 2.0
+    return mult * n * tokens
+
+
+def load_cells(dryrun_dir: str = "results/dryrun") -> List[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_row(rec: dict) -> Optional[dict]:
+    if rec.get("skipped") or rec.get("error"):
+        return None
+    ndev = rec["n_devices"]
+    t_comp = rec["hlo_flops"] / PEAK_FLOPS
+    t_mem = rec["hlo_bytes_written"] / HBM_BW
+    t_coll = rec["wire_bytes_per_device"] / LINK_BW
+    terms = dict(compute=t_comp, memory=t_mem, collective=t_coll)
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    useful = mf / max(rec["hlo_flops"] * ndev, 1.0)
+    # roofline fraction: useful-compute time / bound (the score axis)
+    bound = max(terms.values())
+    frac = (mf / ndev / PEAK_FLOPS) / max(bound, 1e-12)
+    return dict(
+        arch=rec["arch"], shape=rec["shape"],
+        mesh="2x16x16" if rec["multi_pod"] else "16x16",
+        compute_s=t_comp, memory_s=t_mem, collective_s=t_coll,
+        bottleneck=bottleneck,
+        model_flops=mf, useful_ratio=useful,
+        roofline_frac=frac,
+        mem_gb_per_dev=(rec["mem"]["argument_bytes"]
+                        + rec["mem"]["temp_bytes"]) / 2 ** 30,
+    )
+
+
+def table(dryrun_dir: str = "results/dryrun", multi_pod: bool = False):
+    rows = []
+    for rec in load_cells(dryrun_dir):
+        if rec.get("multi_pod") != multi_pod:
+            continue
+        r = roofline_row(rec)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def run(quick: bool = True):
+    rows = []
+    for r in table(multi_pod=False):
+        rows.append(dict(fig="roofline", **r))
+    return rows

@@ -1,0 +1,61 @@
+"""Workload generators shared by the benchmark applications (paper §VI-B).
+
+Host-side numpy generators (the Parser operator): Zipf-skewed key choice,
+multi-partition transaction mixes, deterministic seeding.  Keys within one
+transaction are sampled *distinct* (the paper's record lists; also required
+so a transaction never touches the same state twice, matching all four
+applications' semantics).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def zipf_probs(n_keys: int, theta: float) -> np.ndarray:
+    """P(k) ∝ 1/(k+1)^theta — the standard Zipfian access distribution."""
+    w = 1.0 / np.power(np.arange(1, n_keys + 1, dtype=np.float64), theta)
+    return w / w.sum()
+
+
+def sample_keys(rng: np.random.Generator, n_events: int, ops_per_txn: int,
+                n_keys: int, theta: float) -> np.ndarray:
+    """[n_events, ops_per_txn] Zipf-skewed keys, distinct within a txn."""
+    p = zipf_probs(n_keys, theta)
+    if ops_per_txn == 1:
+        return rng.choice(n_keys, size=(n_events, 1), p=p).astype(np.int32)
+    out = np.empty((n_events, ops_per_txn), np.int32)
+    for i in range(n_events):
+        out[i] = rng.choice(n_keys, size=ops_per_txn, replace=False, p=p)
+    return out
+
+
+def sample_multipartition_keys(
+        rng: np.random.Generator, n_events: int, ops_per_txn: int,
+        n_keys: int, theta: float, n_partitions: int,
+        mp_ratio: float, mp_len: int) -> np.ndarray:
+    """Keys honouring the paper's multi-partition mix: ``mp_ratio`` of the
+    transactions touch exactly ``mp_len`` distinct partitions (hash = key %
+    n_partitions); the rest stay within a single partition."""
+    p = zipf_probs(n_keys, theta)
+    keys = np.empty((n_events, ops_per_txn), np.int32)
+    is_mp = rng.random(n_events) < mp_ratio
+    key_part = np.arange(n_keys) % n_partitions
+    part_pools = [np.flatnonzero(key_part == q) for q in range(n_partitions)]
+    part_probs = [p[pool] / p[pool].sum() for pool in part_pools]
+    for i in range(n_events):
+        span = mp_len if is_mp[i] else 1
+        span = min(span, n_partitions, ops_per_txn)
+        parts = rng.choice(n_partitions, size=span, replace=False)
+        ks: list = []
+        for j in range(ops_per_txn):
+            q = parts[j % span]
+            pool, pp = part_pools[q], part_probs[q]
+            while True:
+                k = rng.choice(pool, p=pp)
+                if k not in ks:
+                    break
+            ks.append(k)
+        keys[i] = ks
+    return keys

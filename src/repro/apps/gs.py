@@ -1,0 +1,72 @@
+"""Grep and Sum (GS) — paper §VI-A, Figure 5.
+
+Grep issues one state transaction of 10 accesses per event: a read event
+READs 10 records and forwards the values to Sum (fused here, per §V operator
+fusion); a write event WRITEs 10 records.  Table: 10k records.  Associative
+(READ/PUT) -> eligible for the segmented-scan fast path.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blotter import AppSpec, Blotter
+from repro.core.types import ASSOC_FUNS, OpKind, make_store
+
+from .common import sample_keys, sample_multipartition_keys
+
+TXN_LEN = 10
+N_KEYS = 10_000
+WIDTH = 1
+
+
+def make_gs_store(n_keys: int = N_KEYS, rng: np.random.Generator | None = None):
+    rng = rng or np.random.default_rng(0)
+    init = np.zeros((n_keys + 1, WIDTH), np.float32)
+    init[:n_keys, 0] = rng.uniform(1.0, 100.0, n_keys)
+    return make_store([n_keys], WIDTH, init=jnp.asarray(init))
+
+
+def gen_events(rng: np.random.Generator, n_events: int, *,
+               n_keys: int = N_KEYS, theta: float = 0.6,
+               read_ratio: float = 0.5, n_partitions: int = 0,
+               mp_ratio: float = 0.0, mp_len: int = 4) -> Dict[str, np.ndarray]:
+    if n_partitions:
+        keys = sample_multipartition_keys(rng, n_events, TXN_LEN, n_keys,
+                                          theta, n_partitions, mp_ratio, mp_len)
+    else:
+        keys = sample_keys(rng, n_events, TXN_LEN, n_keys, theta)
+    return dict(
+        keys=keys,
+        is_read=(rng.random(n_events) < read_ratio),
+        values=rng.uniform(1.0, 100.0, (n_events, TXN_LEN)).astype(np.float32),
+    )
+
+
+def pre_process(ev):
+    return ev  # Parser already produced structured fields
+
+
+def state_access(blt: Blotter, eb):
+    f_read, f_put = blt.fun_id("read"), blt.fun_id("put")
+    fun = jnp.where(eb["is_read"], f_read, f_put)
+    kind = jnp.where(eb["is_read"], int(OpKind.READ), int(OpKind.WRITE))
+    for j in range(TXN_LEN):
+        blt.read_modify(0, eb["keys"][j], eb["values"][j], fun)
+        blt.rows[-1]["kind"] = jnp.asarray(kind, jnp.int32)
+
+
+def post_process(eb, res):
+    # Sum operator: sum of returned values for read events; else pass-through.
+    total = jnp.sum(res.pre[:, 0]) * eb["is_read"]
+    return dict(sum=total, ok=jnp.all(res.success))
+
+
+GS = AppSpec(
+    name="gs", funs=ASSOC_FUNS, max_ops=TXN_LEN, width=WIDTH,
+    make_store=make_gs_store, gen_events=gen_events,
+    pre_process=pre_process, state_access=state_access,
+    post_process=post_process, has_gates=False, may_abort=False,
+)

@@ -1,0 +1,102 @@
+"""Online Bidding (OB) — paper §VI-A, Figure 7.
+
+Item state: [price, quantity].  Request mix 6:1:1 —
+  bid   (len 1):  if bid_price >= price and qty >= req: qty -= req else reject
+  alter (len 20): overwrite the price of 20 items
+  top   (len 20): increase the quantity of 20 items
+
+``bid`` is the user-defined conditional Fun (not associative) -> lockstep
+path; it may be rejected ("rejected" notification via success flag).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blotter import AppSpec, Blotter
+from repro.core.types import CORE_FUNS, FunSpec, make_store
+
+from .common import sample_keys
+
+N_KEYS = 10_000
+WIDTH = 2      # lanes: [price, quantity]
+MAX_OPS = 20
+BID, ALTER, TOP = 0, 1, 2
+
+
+def _f_bid(pre, operand):
+    """operand = [bid_price, req_qty]."""
+    ok = (operand[0] >= pre[0]) & (pre[1] >= operand[1])
+    qty = pre[1] - jnp.where(ok, operand[1], 0.0)
+    return jnp.stack([pre[0], qty]), ok
+
+
+def _f_set_price(pre, operand):
+    return jnp.stack([operand[0], pre[1]]), jnp.asarray(True)
+
+
+def _f_add_qty(pre, operand):
+    return jnp.stack([pre[0], pre[1] + operand[1]]), jnp.asarray(True)
+
+
+F_BID = FunSpec("bid", _f_bid)
+F_SET_PRICE = FunSpec(
+    "set_price", _f_set_price,
+    affine=lambda o: (jnp.asarray([0.0, 1.0]), o * jnp.asarray([1.0, 0.0])))
+F_ADD_QTY = FunSpec(
+    "add_qty", _f_add_qty,
+    affine=lambda o: (jnp.asarray([1.0, 1.0]), o * jnp.asarray([0.0, 1.0])))
+
+OB_FUNS = CORE_FUNS + (F_BID, F_SET_PRICE, F_ADD_QTY)
+
+
+def make_ob_store(n_keys: int = N_KEYS, rng: np.random.Generator | None = None):
+    rng = rng or np.random.default_rng(2)
+    init = np.zeros((n_keys + 1, WIDTH), np.float32)
+    init[:n_keys, 0] = rng.uniform(10.0, 100.0, n_keys)   # price
+    init[:n_keys, 1] = rng.uniform(0.0, 1000.0, n_keys)   # quantity
+    return make_store([n_keys], WIDTH, init=jnp.asarray(init))
+
+
+def gen_events(rng: np.random.Generator, n_events: int, *,
+               n_keys: int = N_KEYS, theta: float = 0.6) -> Dict[str, np.ndarray]:
+    kind = rng.choice([BID, ALTER, TOP], size=n_events, p=[0.75, 0.125, 0.125])
+    return dict(
+        kind=kind.astype(np.int32),
+        keys=sample_keys(rng, n_events, MAX_OPS, n_keys, theta),
+        prices=rng.uniform(10.0, 100.0, (n_events, MAX_OPS)).astype(np.float32),
+        qtys=rng.uniform(1.0, 20.0, (n_events, MAX_OPS)).astype(np.float32),
+    )
+
+
+def pre_process(ev):
+    return ev
+
+
+def state_access(blt: Blotter, eb):
+    f_bid = blt.fun_id("bid")
+    f_set, f_addq = blt.fun_id("set_price"), blt.fun_id("add_qty")
+    kind = eb["kind"]
+    is_bid, is_alter = kind == BID, kind == ALTER
+    fun = jnp.where(is_bid, f_bid, jnp.where(is_alter, f_set, f_addq))
+    for j in range(MAX_OPS):
+        operand = jnp.stack([eb["prices"][j], eb["qtys"][j]])
+        # bids touch only their first item; alter/top touch all 20
+        blt.read_modify(0, eb["keys"][j], operand, fun,
+                        valid=jnp.where(is_bid, j == 0, True))
+
+
+def post_process(eb, res):
+    is_bid = eb["kind"] == BID
+    return dict(rejected=is_bid & ~res.success[0],
+                qty_after=res.post[0, 1])
+
+
+OB = AppSpec(
+    name="ob", funs=OB_FUNS, max_ops=MAX_OPS, width=WIDTH,
+    make_store=make_ob_store, gen_events=gen_events,
+    pre_process=pre_process, state_access=state_access,
+    post_process=post_process, has_gates=False, may_abort=True,
+)

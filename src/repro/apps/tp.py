@@ -1,0 +1,91 @@
+"""Toll Processing (TP) — Linear Road, paper §II (Figure 2b) and §VI-A.
+
+Operators Road Speed / Vehicle Cnt / Toll Notification are *fused* (paper §V)
+into one joint operator; per position report the fused transaction is:
+
+  RMW  SpeedTable[seg]  += [speed, 1]        (running average as (sum, count))
+  RMW  CountTable[seg]  |= onehot(vehicle)   (unique count; see note)
+  READ SpeedTable[seg]                       (TN reads *updated* status:
+  READ CountTable[seg]                        same ts, later slot -> chain
+                                              order gives the fresh version)
+
+Hardware adaptation (DESIGN.md §8): the paper's per-segment HashSet of
+vehicle ids has no fixed-size TPU representation; we use a W-lane linear
+probabilistic counting sketch — vehicle hashed to a lane, lanes combined by
+elementwise max (associative!).  Unique-count estimates come from the lane
+occupancy.  SpeedTable uses the affine ADD family.  Both are associative ->
+segmented-scan fast path, even though the workload has only 100 hot keys.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blotter import AppSpec, Blotter
+from repro.core.types import ASSOC_FUNS, make_store
+
+from .common import zipf_probs
+
+N_SEGMENTS = 100
+WIDTH = 32          # LPC sketch lanes (also holds [sum, count] for speed)
+MAX_OPS = 4
+T_SPEED, T_CNT = 0, 1
+
+
+def make_tp_store(n_segments: int = N_SEGMENTS, **_):
+    return make_store([n_segments, n_segments], WIDTH,
+                      is_max=[False, True])
+
+
+def gen_events(rng: np.random.Generator, n_events: int, *,
+               n_segments: int = N_SEGMENTS, theta: float = 0.2,
+               n_vehicles: int = 5_000) -> Dict[str, np.ndarray]:
+    p = zipf_probs(n_segments, theta)
+    return dict(
+        segment=rng.choice(n_segments, size=n_events, p=p).astype(np.int32),
+        vehicle=rng.integers(0, n_vehicles, n_events).astype(np.int32),
+        speed=rng.uniform(20.0, 120.0, n_events).astype(np.float32),
+    )
+
+
+def pre_process(ev):
+    lane = ev["vehicle"] % WIDTH
+    return dict(ev, lane=lane)
+
+
+def state_access(blt: Blotter, eb):
+    seg = eb["segment"]
+    # Road Speed: running average of traffic speed
+    speed_op = jnp.zeros((WIDTH,), jnp.float32)
+    speed_op = speed_op.at[0].set(eb["speed"]).at[1].set(1.0)
+    blt.read_modify(T_SPEED, seg, speed_op, "add")
+    # Vehicle Cnt: LPC sketch update
+    sketch = jnp.zeros((WIDTH,), jnp.float32).at[eb["lane"]].set(1.0)
+    blt.read_modify(T_CNT, seg, sketch, "max")
+    # Toll Notification: read the *updated* congestion status
+    s = blt.read(T_SPEED, seg)
+    c = blt.read(T_CNT, seg)
+    return s, c
+
+
+def post_process(eb, res):
+    speed_sum, cnt = res.pre[2, 0], res.pre[2, 1]
+    avg_speed = speed_sum / jnp.maximum(cnt, 1.0)
+    occupied = jnp.sum(res.pre[3] > 0.0)
+    # LPC estimate of unique vehicles from lane occupancy
+    frac = jnp.clip(occupied / WIDTH, 0.0, 1.0 - 1e-3)
+    uniq = -WIDTH * jnp.log1p(-frac)
+    congested = (avg_speed < 40.0) & (uniq > 5.0)
+    toll = jnp.where(congested, 2.0 * (uniq - 5.0) ** 2, 0.0)
+    return dict(toll=toll, avg_speed=avg_speed, uniq=uniq)
+
+
+TP = AppSpec(
+    name="tp", funs=ASSOC_FUNS, max_ops=MAX_OPS, width=WIDTH,
+    make_store=make_tp_store, gen_events=gen_events,
+    pre_process=pre_process, state_access=state_access,
+    post_process=post_process, has_gates=False, may_abort=False,
+)

@@ -1,0 +1,12 @@
+"""TStream core: transactional concurrent state access for stream processing.
+
+The paper's primary contribution — dual-mode scheduling (D1) and dynamic
+restructuring execution (D2) — implemented as data-parallel JAX.
+"""
+from .blotter import AppSpec, Blotter, build_opbatch
+from .engines import SCHEMES, EngineStats, evaluate
+from .restructure import Chains, restructure
+from .scheduler import DualModeEngine, EngineConfig
+from .types import (CORE_FUNS, F_ADD, F_MAX, F_NOP, F_PUT, F_READ, F_TAKE,
+                    FunSpec, OpBatch, OpKind, OpResults, StateStore,
+                    make_store)

@@ -1,0 +1,159 @@
+"""EventBlotter & programming API (paper §IV-A, Tables II/III).
+
+Users express an operator as the three-step procedure (F1):
+
+    eb  = pre_process(event)          # compute mode
+    state_access(blt, eb)             # records ops; postponed (D1)
+    out = post_process(eb, results)   # compute mode, after txn processing
+
+``state_access`` receives a :class:`Blotter` recorder exposing the
+system-provided APIs (READ / WRITE / READ_MODIFY, with optional gating on a
+mate op's success — the paper's ``CFun``).  Recording happens at trace time
+under ``vmap``: each call claims one op slot; parameter values are traced
+arrays.  This is the F2 property (read/write sets known from the event) made
+structural.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .types import CORE_FUNS, FunSpec, OpBatch, OpKind, StateStore
+
+
+class Blotter:
+    """Per-event op recorder (thread-local EventBlotter analogue)."""
+
+    def __init__(self, store: StateStore, funs: Tuple[FunSpec, ...],
+                 max_ops: int, width: int):
+        self._store = store
+        self._funs = funs
+        self._fun_index = {f.name: i for i, f in enumerate(funs)}
+        self.max_ops = max_ops
+        self.width = width
+        self.rows: list = []
+
+    # -- system-provided APIs (Table III) ---------------------------------
+    def read(self, table: int, key, valid=True) -> int:
+        return self._record(OpKind.READ, table, key, "read",
+                            jnp.zeros((self.width,), jnp.float32), -1, valid)
+
+    def write(self, table: int, key, value, fun="put", gate=-1,
+              valid=True) -> int:
+        return self._record(OpKind.WRITE, table, key, fun,
+                            self._lanes(value), gate, valid)
+
+    def read_modify(self, table: int, key, operand, fun, gate=-1,
+                    valid=True) -> int:
+        return self._record(OpKind.READ_MODIFY, table, key, fun,
+                            self._lanes(operand), gate, valid)
+
+    def fun_id(self, name: str) -> int:
+        """Index of a fun by name — for traced (per-event) fun selection."""
+        return self._fun_index[name]
+
+    # ----------------------------------------------------------------------
+    def _lanes(self, value) -> jnp.ndarray:
+        v = jnp.asarray(value, jnp.float32)
+        if v.ndim == 0:
+            v = jnp.zeros((self.width,), jnp.float32).at[0].set(v)
+        assert v.shape == (self.width,), v.shape
+        return v
+
+    def _record(self, kind: OpKind, table: int, key, fun,
+                operand: jnp.ndarray, gate, valid) -> int:
+        """fun may be a name or a traced fun index; gate/valid may be traced
+        (data-dependent op mixes, e.g. deposit vs transfer events)."""
+        slot = len(self.rows)
+        assert slot < self.max_ops, f"max_ops={self.max_ops} exceeded"
+        if isinstance(gate, int):
+            assert gate < slot, "a gated op's mate must occupy an earlier slot"
+        fun_id = self._fun_index[fun] if isinstance(fun, str) else fun
+        self.rows.append(dict(
+            uid=jnp.asarray(self._store.uid_of(table, jnp.asarray(key, jnp.int32)),
+                            jnp.int32),
+            kind=jnp.asarray(int(kind) if isinstance(kind, OpKind) else kind,
+                             jnp.int32),
+            fun=jnp.asarray(fun_id, jnp.int32),
+            gate=jnp.asarray(gate, jnp.int32),
+            operand=operand,
+            valid=jnp.asarray(valid, bool),
+        ))
+        return slot
+
+    def finalize(self) -> Dict[str, jnp.ndarray]:
+        """Pad to max_ops and stack into per-event op rows."""
+        pad_uid = self._store.pad_uid
+        rows = list(self.rows)
+        while len(rows) < self.max_ops:
+            rows.append(dict(
+                uid=jnp.int32(pad_uid), kind=jnp.int32(int(OpKind.NOP)),
+                fun=jnp.int32(0), gate=jnp.int32(-1),
+                operand=jnp.zeros((self.width,), jnp.float32),
+                valid=jnp.asarray(False),
+            ))
+        out = {}
+        for k in ("uid", "kind", "fun", "gate", "operand", "valid"):
+            out[k] = jnp.stack([r[k] for r in rows])
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class AppSpec:
+    """A concurrent stateful streaming application (paper §VI-A)."""
+
+    name: str
+    funs: Tuple[FunSpec, ...]
+    max_ops: int
+    width: int
+    make_store: Callable[..., StateStore]
+    gen_events: Callable[..., Dict[str, np.ndarray]]
+    pre_process: Callable
+    state_access: Callable
+    post_process: Callable
+    has_gates: bool = False
+    may_abort: bool = False
+
+    @property
+    def associative_only(self) -> bool:
+        return all(f.associative for f in self.funs) and not self.has_gates
+
+
+def build_opbatch(app: AppSpec, store: StateStore,
+                  events: Dict[str, jnp.ndarray],
+                  ts_base: jnp.ndarray) -> Tuple[OpBatch, Dict]:
+    """Compute mode: vmapped pre_process + op registration (D1 postponing).
+
+    Returns the flattened OpBatch for the whole punctuation interval plus the
+    per-event blotter payloads needed by post_process.
+    """
+    some = jax.tree_util.tree_leaves(events)[0]
+    batch = some.shape[0]
+
+    def per_event(ev):
+        eb = app.pre_process(ev)
+        blt = Blotter(store, app.funs, app.max_ops, app.width)
+        app.state_access(blt, eb)
+        return blt.finalize(), eb
+
+    rows, ebs = jax.vmap(per_event)(events)
+    n = batch * app.max_ops
+    txn = jnp.repeat(jnp.arange(batch, dtype=jnp.int32), app.max_ops)
+    slot = jnp.tile(jnp.arange(app.max_ops, dtype=jnp.int32), batch)
+    ts = ts_base + txn
+    gate_rel = rows["gate"].reshape(n)
+    gate = jnp.where(gate_rel >= 0, txn * app.max_ops + gate_rel, -1)
+    ops = OpBatch(
+        uid=rows["uid"].reshape(n),
+        ts=ts, txn=txn, slot=slot,
+        kind=rows["kind"].reshape(n),
+        fun=rows["fun"].reshape(n),
+        gate=gate,
+        operand=rows["operand"].reshape(n, app.width),
+        valid=rows["valid"].reshape(n),
+    )
+    return ops, ebs

@@ -1,0 +1,498 @@
+"""Transaction-processing engines: TStream (D2) + re-implemented baselines.
+
+All engines share one contract::
+
+    evaluate(store, ops, funs, ...) -> (OpResults_flat, new_values, stats)
+
+``OpResults_flat`` is in *pre-sort* flat layout ([N] rows aligned with
+(txn, slot)), so the scheduler can reshape it straight back into per-event
+blotters.  ``stats`` carries structural parallelism counters (rounds, chain
+counts) consumed by the benchmark harness's executor model.
+
+Schemes (see DESIGN.md §2 for the multicore->TPU schedule mapping):
+
+* ``tstream``   — D2 dynamic restructuring.  Associative-only apps take the
+                  segmented-scan fast path (log-depth chains); otherwise the
+                  lockstep path walks all chains in parallel, one op per chain
+                  per round (the paper's one-thread-per-chain walk).  Gated
+                  ops (cross-chain CFun deps) are scheduled level-wise like
+                  the paper's iterative process; unresolved residue (cycles)
+                  falls back to the sequential oracle for affected ops.
+* ``lock``      — S2PL + lockAhead schedule: conflict-equivalent global ts
+                  order, one transaction at a time (depth N).  Doubles as the
+                  correctness oracle.
+* ``mvlk``      — multiversion locking: writes serialize per state, reads are
+                  served from versions in parallel.
+* ``pat``       — S-Store partition-level locking: partitions advance their
+                  ts-ordered fronts; a multi-partition transaction fires only
+                  when it is at the front of *all* its partitions.
+* ``nolock``    — no ordering (upper bound, deliberately incorrect).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .restructure import (Chains, restructure, segmented_scan_affine,
+                          segmented_scan_max)
+from .types import FunSpec, OpBatch, OpKind, OpResults, StateStore
+
+
+# ---------------------------------------------------------------------------
+# Fun application
+# ---------------------------------------------------------------------------
+def apply_funs(funs: Tuple[FunSpec, ...], fun_id: jnp.ndarray,
+               pre: jnp.ndarray, operand: jnp.ndarray):
+    """Vectorized lax.switch over the app's fun family.
+
+    pre, operand: [N, W] -> (post [N, W], success bool[N]).
+    """
+    branches = [f.apply for f in funs]
+
+    def one(fid, p, o):
+        return jax.lax.switch(fid, branches, p, o)
+
+    return jax.vmap(one)(fun_id, pre, operand)
+
+
+def affine_coeffs(funs: Tuple[FunSpec, ...], fun_id: jnp.ndarray,
+                  operand: jnp.ndarray):
+    """Per-op (a, b) affine coefficients; identity for non-affine funs."""
+    ident = (jnp.ones_like(operand), jnp.zeros_like(operand))
+    branches = [(f.affine if f.affine is not None else (lambda o: (jnp.ones_like(o), jnp.zeros_like(o))))
+                for f in funs]
+
+    def one(fid, o):
+        return jax.lax.switch(fid, branches, o)
+
+    del ident
+    return jax.vmap(one)(fun_id, operand)
+
+
+def _gate_open(gate: jnp.ndarray, success_flat: jnp.ndarray) -> jnp.ndarray:
+    """CFun gating: open when ungated, else the mate op's recorded success."""
+    return jnp.where(gate >= 0, jnp.take(success_flat, jnp.maximum(gate, 0)), True)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Structural parallelism counters for the executor cost model."""
+    rounds: jnp.ndarray          # sequential depth of the schedule
+    n_chains: jnp.ndarray        # parallel width available
+    max_chain: jnp.ndarray       # longest chain
+    n_ops: int                   # total decomposed ops (incl. padding)
+    scheme: str = ""
+    path: str = ""               # "segscan" | "lockstep" | ...
+
+
+jax.tree_util.register_dataclass(
+    EngineStats, data_fields=["rounds", "n_chains", "max_chain"],
+    meta_fields=["n_ops", "scheme", "path"])
+
+
+def _empty_results(n: int, w: int):
+    return dict(pre=jnp.zeros((n + 1, w)), post=jnp.zeros((n + 1, w)),
+                success=jnp.zeros((n + 1,), bool))
+
+
+# ---------------------------------------------------------------------------
+# TStream fast path: segmented-scan chain evaluation (associative funs only)
+# ---------------------------------------------------------------------------
+def eval_tstream_scan(store: StateStore, ops: OpBatch,
+                      funs: Tuple[FunSpec, ...], *, use_pallas: bool = False):
+    sops, ch = restructure(ops, store.pad_uid)
+    v0 = jnp.take(store.values, sops.uid, axis=0)          # [N, W]
+    is_max_uid = jnp.take(store.uid_is_max(), sops.uid)    # [N]
+
+    # affine family scan (non-affine & max-table ops become identity)
+    a, b = affine_coeffs(funs, sops.fun, sops.operand)
+    neutralize = is_max_uid[:, None]
+    a = jnp.where(neutralize, jnp.ones_like(a), a)
+    b = jnp.where(neutralize, jnp.zeros_like(b), b)
+
+    # max family scan (ops on non-max tables and READs become -inf)
+    is_max_fun = jnp.asarray([f.is_max for f in funs])[sops.fun]
+    m = jnp.where((is_max_uid & is_max_fun)[:, None], sops.operand, -jnp.inf)
+
+    if use_pallas:
+        from repro.kernels.segscan import ops as segscan_ops
+        A, B = segscan_ops.segscan_affine(a, b, ch.seg_start, exclusive=True)
+        M = segscan_ops.segscan_max(m, ch.seg_start, exclusive=True)
+    else:
+        A, B = segmented_scan_affine(a, b, ch.seg_start, exclusive=True)
+        M = segmented_scan_max(m, ch.seg_start, exclusive=True)
+
+    pre_aff = A * v0 + B
+    pre_max = jnp.maximum(v0, M)
+    pre = jnp.where(is_max_uid[:, None], pre_max, pre_aff)
+    post, success = apply_funs(funs, sops.fun, pre, sops.operand)
+
+    # commit: last op of each chain defines the new state value
+    n = ops.n_ops
+    scatter_uid = jnp.where(ch.seg_end, sops.uid, store.pad_uid)
+    new_values = store.values.at[scatter_uid].set(
+        jnp.where(ch.seg_end[:, None], post, store.values[store.pad_uid]))
+    new_values = new_values.at[store.pad_uid].set(0.0)
+
+    # invalid (padding) ops record nothing — match the oracle's layout
+    vmask = sops.valid
+    pre = jnp.where(vmask[:, None], pre, 0.0)
+    post = jnp.where(vmask[:, None], post, 0.0)
+    success = success & vmask
+    res = _scatter_results(n, ops.width, ch.order, pre, post, success)
+    stats = EngineStats(rounds=jnp.ceil(jnp.log2(ch.max_len.astype(jnp.float32) + 1)),
+                        n_chains=ch.n_chains, max_chain=ch.max_len,
+                        n_ops=n, scheme="tstream", path="segscan")
+    return res, new_values, stats
+
+
+def _scatter_results(n, w, order, pre, post, success):
+    out = _empty_results(n, w)
+    out["pre"] = out["pre"].at[order].set(pre)[:n]
+    out["post"] = out["post"].at[order].set(post)[:n]
+    out["success"] = out["success"].at[order].set(success)[:n]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# TStream lockstep path: parallel chains, sequential within chain, level-wise
+# dependency resolution (paper §IV-C2 Case 2).
+# ---------------------------------------------------------------------------
+def _chain_levels(sops: OpBatch, ch: Chains, n: int, max_levels: int):
+    """Level-wise chain schedule for cross-chain CFun dependencies.
+
+    level(C) = 0 if C has no gated ops, else 1 + max(level(mate chain)).
+    Chains whose level does not resolve within ``max_levels`` (dependency
+    cycles inside the batch) are flagged for the sequential fallback.
+    """
+    INF = jnp.int32(10 ** 6)
+    # seg id of each op in pre-sort layout, so mate (flat idx) -> chain id
+    seg_flat = jnp.zeros((n + 1,), jnp.int32).at[ch.order].set(ch.seg_id)
+    gated = (sops.gate >= 0) & sops.valid
+    mate_chain = seg_flat[jnp.maximum(sops.gate, 0)]
+    chain_has_gate = jax.ops.segment_max(gated.astype(jnp.int32), ch.seg_id,
+                                         num_segments=n) > 0
+    lvl = jnp.where(chain_has_gate, INF, 0)
+
+    def body(_, lvl):
+        pred_lvl = jnp.where(gated, lvl[mate_chain], -1)
+        need = jax.ops.segment_max(
+            jnp.where(gated, jnp.minimum(pred_lvl + 1, INF), 0),
+            ch.seg_id, num_segments=n)
+        return jnp.where(chain_has_gate, jnp.minimum(need, INF), 0)
+
+    lvl = jax.lax.fori_loop(0, max_levels, body, lvl)
+    unresolved = lvl >= INF
+    return lvl, unresolved
+
+
+def _lockstep_sweep(values, sops: OpBatch, ch: Chains,
+                    funs: Tuple[FunSpec, ...], chain_mask, results, n, pad_uid,
+                    rounds):
+    """Walk masked chains in lockstep: round r applies each chain's r-th op.
+
+    Exactly one op per state per round -> conflict-free scatters, no locks.
+    """
+    def round_body(r, carry):
+        values, res = carry
+        active = (ch.pos == r) & jnp.take(chain_mask, ch.seg_id) & sops.valid
+        cur = jnp.take(values, sops.uid, axis=0)
+        # sops.gate holds the mate's *pre-sort* flat index; success is
+        # recorded in pre-sort layout, so this gather is layout-consistent.
+        gate_ok_s = _gate_open(sops.gate, res["success"][:-1])
+        post, ok = apply_funs(funs, sops.fun, cur, sops.operand)
+        post = jnp.where(gate_ok_s[:, None], post, cur)
+        ok = ok & gate_ok_s
+        scat = jnp.where(active, sops.uid, pad_uid)
+        values = values.at[scat].set(jnp.where(active[:, None], post, 0.0))
+        values = values.at[pad_uid].set(0.0)
+        sink = jnp.where(active, ch.order, n)
+        res = dict(
+            pre=res["pre"].at[sink].set(cur),
+            post=res["post"].at[sink].set(post),
+            success=res["success"].at[sink].set(ok),
+        )
+        return values, res
+
+    return jax.lax.fori_loop(0, rounds, round_body, (values, results))
+
+
+def eval_tstream_lockstep(store: StateStore, ops: OpBatch,
+                          funs: Tuple[FunSpec, ...], *, max_dep_levels: int = 3,
+                          has_gates: bool = False):
+    sops, ch = restructure(ops, store.pad_uid)
+    n = ops.n_ops
+    values = store.values
+    results = _empty_results(n, ops.width)
+
+    if not has_gates:
+        values, results = _lockstep_sweep(
+            values, sops, ch, funs, jnp.ones((n,), bool), results, n,
+            store.pad_uid, ch.max_len)
+        rounds = ch.max_len
+        unresolved_ops = jnp.zeros((n,), bool)
+    else:
+        lvl, unresolved = _chain_levels(sops, ch, n, max_dep_levels)
+        rounds = jnp.int32(0)
+        for L in range(max_dep_levels + 1):
+            mask = (lvl == L)
+            # this level's sweep only needs the longest level-L chain
+            in_level = jnp.take(mask, ch.seg_id) & sops.valid
+            lvl_rounds = jnp.max(jnp.where(in_level, ch.pos, -1)) + 1
+            values, results = _lockstep_sweep(
+                values, sops, ch, funs, mask, results, n, store.pad_uid,
+                lvl_rounds)
+            rounds = rounds + lvl_rounds
+        # sequential fallback for ops in unresolved chains (cycles)
+        unresolved_ops_sorted = jnp.take(unresolved, ch.seg_id) & sops.valid
+        unresolved_ops = jnp.zeros((n + 1,), bool).at[ch.order].set(
+            unresolved_ops_sorted)[:n]
+        values, results = _sequential_sweep(values, ops, funs, results,
+                                            mask_flat=unresolved_ops,
+                                            pad_uid=store.pad_uid)
+        rounds = rounds + jnp.sum(unresolved_ops)
+
+    res = {k: v[:n] for k, v in results.items()}
+    stats = EngineStats(rounds=rounds, n_chains=ch.n_chains,
+                        max_chain=ch.max_len, n_ops=n,
+                        scheme="tstream", path="lockstep")
+    return res, values, stats
+
+
+# ---------------------------------------------------------------------------
+# Sequential oracle / LOCK schedule
+# ---------------------------------------------------------------------------
+def _sequential_sweep(values, ops: OpBatch, funs, results, *, mask_flat,
+                      pad_uid):
+    """Apply ops one at a time in global (ts, slot) order (S2PL schedule)."""
+    n = ops.n_ops
+    order = jnp.lexsort((ops.slot, ops.ts))  # global timestamp order
+
+    def step(carry, i):
+        values, res = carry
+        j = order[i]
+        run = mask_flat[j] & ops.valid[j]
+        uid = jnp.where(run, ops.uid[j], pad_uid)
+        cur = values[uid]
+        gate = ops.gate[j]
+        gate_ok = jnp.where(gate >= 0, res["success"][jnp.maximum(gate, 0)],
+                            True)
+        post, ok = funs_apply_single(funs, ops.fun[j], cur, ops.operand[j])
+        post = jnp.where(gate_ok, post, cur)
+        ok = ok & gate_ok
+        values = values.at[uid].set(jnp.where(run, post, values[pad_uid]))
+        values = values.at[pad_uid].set(0.0)
+        sink = jnp.where(run, j, n)
+        res = dict(
+            pre=res["pre"].at[sink].set(cur),
+            post=res["post"].at[sink].set(post),
+            success=res["success"].at[sink].set(ok),
+        )
+        return (values, res), None
+
+    (values, results), _ = jax.lax.scan(step, (values, results),
+                                        jnp.arange(n))
+    return values, results
+
+
+def funs_apply_single(funs, fid, pre, operand):
+    return jax.lax.switch(fid, [f.apply for f in funs], pre, operand)
+
+
+def eval_lock(store: StateStore, ops: OpBatch, funs):
+    """LOCK baseline == sequential oracle (conflict-equivalent ts order)."""
+    n = ops.n_ops
+    results = _empty_results(n, ops.width)
+    values, results = _sequential_sweep(
+        store.values, ops, funs, results,
+        mask_flat=jnp.ones((n,), bool), pad_uid=store.pad_uid)
+    results = {k: v[:n] for k, v in results.items()}
+    stats = EngineStats(rounds=jnp.sum(ops.valid), n_chains=jnp.int32(1),
+                        max_chain=jnp.sum(ops.valid), n_ops=n,
+                        scheme="lock", path="sequential")
+    return results, values, stats
+
+
+# ---------------------------------------------------------------------------
+# MVLK: multiversion — writes serialize per chain, reads resolve in parallel
+# ---------------------------------------------------------------------------
+def eval_mvlk(store: StateStore, ops: OpBatch, funs,
+              *, has_gates: bool = False, max_dep_levels: int = 3):
+    """Writes run as (lockstep) chains; READs are version lookups.
+
+    Structurally: read ops are identity within chains (their ``pre`` is the
+    version with the largest ts' < ts — exactly the paper's lwm-guarded
+    multiversion read), so we can reuse the lockstep machinery; the *cost
+    model* difference (reads don't occupy chain rounds) is reflected in the
+    stats: rounds count only write-chain depth.
+    """
+    sops, ch = restructure(ops, store.pad_uid)
+    is_write = sops.kind != int(OpKind.READ)
+    write_pos = _masked_positions(is_write, ch)
+    write_depth = jnp.max(jnp.where(is_write, write_pos, -1)) + 1
+    res, values, st = eval_tstream_lockstep(
+        store, ops, funs, has_gates=has_gates, max_dep_levels=max_dep_levels)
+    stats = EngineStats(rounds=write_depth, n_chains=ch.n_chains,
+                        max_chain=st.max_chain, n_ops=ops.n_ops,
+                        scheme="mvlk", path="mv")
+    return res, values, stats
+
+
+def _masked_positions(mask, ch: Chains):
+    """Position of each op among *masked* ops of its chain."""
+    inc = jnp.cumsum(mask.astype(jnp.int32))
+    seg_base = jax.lax.cummax(jnp.where(ch.seg_start,
+                                        inc - mask.astype(jnp.int32), 0))
+    return inc - seg_base - mask.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# PAT: partition-level locking (S-Store)
+# ---------------------------------------------------------------------------
+def eval_pat(store: StateStore, ops: OpBatch, funs, *, n_partitions: int = 16):
+    """Partitions advance ts-ordered fronts; a transaction fires only when it
+    holds the front of *every* partition it touches (S-Store's counter-guarded
+    partition-lock acquisition).  A txn's ops within one partition are
+    contiguous after the (partition, ts, slot) sort, so readiness reduces to:
+    each of the txn's per-partition blocks starts at that partition's front.
+    """
+    n = ops.n_ops
+    part = jnp.where(ops.valid, ops.uid % n_partitions, n_partitions)
+    order = jnp.lexsort((ops.slot, ops.ts, part))
+    part_s = jnp.take(part, order)
+    seg_start = jnp.concatenate([jnp.ones((1,), bool),
+                                 part_s[1:] != part_s[:-1]])
+    idx = jnp.arange(n, dtype=jnp.int32)
+    start_idx = jax.lax.cummax(jnp.where(seg_start, idx, 0))
+    pos = idx - start_idx
+
+    sop = jax.tree_util.tree_map(lambda x: jnp.take(x, order, axis=0), ops)
+    # (txn, partition) block structure — a txn's ops in one partition are
+    # contiguous (same ts) and are executed under one lock acquisition.
+    blk_start = seg_start | jnp.concatenate(
+        [jnp.ones((1,), bool), sop.txn[1:] != sop.txn[:-1]])
+    blk_start_idx = jax.lax.cummax(jnp.where(blk_start, idx, 0))
+    blk_front_pos = jnp.take(pos, blk_start_idx)  # pos of block's first op
+    blk_id = jnp.cumsum(blk_start.astype(jnp.int32)) - 1
+    blk_len = jnp.take(
+        jax.ops.segment_sum(jnp.ones((n,), jnp.int32), blk_id,
+                            num_segments=n), blk_id)
+    # same-uid runs inside a block execute sequentially (slot order)
+    uidrun_start = blk_start | jnp.concatenate(
+        [jnp.ones((1,), bool), sop.uid[1:] != sop.uid[:-1]])
+
+    txn_total = jax.ops.segment_sum(ops.valid.astype(jnp.int32), ops.txn,
+                                    num_segments=n)
+    results = _empty_results(n, ops.width)
+    values = store.values
+    front = jnp.zeros((n_partitions + 1,), jnp.int32)
+    part_len = jax.ops.segment_sum(jnp.ones((n,), jnp.int32), part_s,
+                                   num_segments=n_partitions + 1)
+    fired = jnp.zeros((n,), bool)
+
+    def cond(carry):
+        values, res, front, fired, rounds = carry
+        return (rounds < n) & jnp.any(~fired & sop.valid)
+
+    def body(carry):
+        values, res, front, fired, rounds = carry
+        # the op's block holds its partition's lock: the front pointer lies
+        # inside the block (a partially executed block keeps the lock).
+        fr = jnp.take(front, part_s)
+        block_at_front = (fr >= blk_front_pos) & (fr < blk_front_pos + blk_len)
+        candidate = (block_at_front | fired) & sop.valid
+        txn_cand = jax.ops.segment_sum(candidate.astype(jnp.int32), sop.txn,
+                                       num_segments=n)
+        ready = (txn_cand >= txn_total) & (txn_total > 0)
+        prev_fired = jnp.concatenate([jnp.zeros((1,), bool), fired[:-1]])
+        fire = block_at_front & ~fired & sop.valid \
+            & jnp.take(ready, sop.txn) & (uidrun_start | prev_fired)
+        cur = jnp.take(values, sop.uid, axis=0)
+        # intra-txn gates: mates fire in the same round — resolve ungated first
+        post0, ok0 = apply_funs(funs, sop.fun, cur, sop.operand)
+        sink_now = jnp.where(fire & (sop.gate < 0), order, n)
+        succ_now = jnp.zeros((n + 1,), bool).at[sink_now].set(ok0)
+        succ_known = succ_now[:-1] | res["success"][:-1]
+        gate_ok = jnp.where(sop.gate >= 0,
+                            jnp.take(succ_known, jnp.maximum(sop.gate, 0)),
+                            True)
+        post = jnp.where(gate_ok[:, None], post0, cur)
+        ok = ok0 & gate_ok
+        scat = jnp.where(fire, sop.uid, store.pad_uid)
+        values = values.at[scat].set(jnp.where(fire[:, None], post, 0.0))
+        values = values.at[store.pad_uid].set(0.0)
+        sink = jnp.where(fire, order, n)
+        res = dict(pre=res["pre"].at[sink].set(cur),
+                   post=res["post"].at[sink].set(post),
+                   success=res["success"].at[sink].set(ok))
+        fired = fired | fire
+        adv = jax.ops.segment_sum(fire.astype(jnp.int32), part_s,
+                                  num_segments=n_partitions + 1)
+        front = front + adv
+        return values, res, front, fired, rounds + 1
+
+    values, results, front, fired, rounds = jax.lax.while_loop(
+        cond, body, (values, results, front, fired, jnp.int32(0)))
+    results = {k: v[:n] for k, v in results.items()}
+    stats = EngineStats(rounds=rounds, n_chains=jnp.int32(n_partitions),
+                        max_chain=jnp.max(part_len[:n_partitions]), n_ops=n,
+                        scheme="pat", path="partition")
+    return results, values, stats
+
+
+# ---------------------------------------------------------------------------
+# No-Lock upper bound (incorrect by design)
+# ---------------------------------------------------------------------------
+def eval_nolock(store: StateStore, ops: OpBatch, funs):
+    pre = jnp.take(store.values, jnp.where(ops.valid, ops.uid, store.pad_uid),
+                   axis=0)
+    post, ok = apply_funs(funs, ops.fun, pre, ops.operand)
+    scat = jnp.where(ops.valid & (ops.kind != int(OpKind.READ)), ops.uid,
+                     store.pad_uid)
+    values = store.values.at[scat].set(post)
+    values = values.at[store.pad_uid].set(0.0)
+    res = dict(pre=jnp.concatenate([pre, pre[:1]]),
+               post=jnp.concatenate([post, post[:1]]),
+               success=jnp.concatenate([ok, ok[:1]]))
+    res = {k: v[: ops.n_ops] for k, v in res.items()}
+    stats = EngineStats(rounds=jnp.int32(1), n_chains=jnp.int32(ops.n_ops),
+                        max_chain=jnp.int32(1), n_ops=ops.n_ops,
+                        scheme="nolock", path="parallel")
+    return res, values, stats
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+SCHEMES = ("tstream", "tstream_scan", "tstream_lockstep", "lock", "mvlk",
+           "pat", "nolock")
+
+
+def evaluate(store: StateStore, ops: OpBatch, funs: Tuple[FunSpec, ...],
+             scheme: str = "tstream", *, associative_only: bool = False,
+             has_gates: bool = False, n_partitions: int = 16,
+             max_dep_levels: int = 3, use_pallas: bool = False):
+    if scheme == "tstream":
+        if associative_only and not has_gates:
+            return eval_tstream_scan(store, ops, funs, use_pallas=use_pallas)
+        return eval_tstream_lockstep(store, ops, funs, has_gates=has_gates,
+                                     max_dep_levels=max_dep_levels)
+    if scheme == "tstream_scan":
+        return eval_tstream_scan(store, ops, funs, use_pallas=use_pallas)
+    if scheme == "tstream_lockstep":
+        return eval_tstream_lockstep(store, ops, funs, has_gates=has_gates,
+                                     max_dep_levels=max_dep_levels)
+    if scheme == "lock":
+        return eval_lock(store, ops, funs)
+    if scheme == "mvlk":
+        return eval_mvlk(store, ops, funs, has_gates=has_gates,
+                         max_dep_levels=max_dep_levels)
+    if scheme == "pat":
+        return eval_pat(store, ops, funs, n_partitions=n_partitions)
+    if scheme == "nolock":
+        return eval_nolock(store, ops, funs)
+    raise ValueError(f"unknown scheme {scheme!r}; choose from {SCHEMES}")

@@ -1,0 +1,142 @@
+"""Dynamic restructuring (paper §IV-C1): transactions -> operation chains.
+
+The paper decomposes each postponed transaction into per-state operations and
+inserts them into timestamp-sorted per-state lists (operation chains) via a
+concurrent skip list.  The TPU-native equivalent is a stable lexicographic
+sort by (state uid, ts, slot): after sorting, each chain is a contiguous
+segment, already timestamp-ordered.  Sorting is deterministic, O(N log N),
+and — unlike a concurrent data structure — meaningful in SPMD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import OpBatch
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Chains:
+    """Operation chains over a sorted view of an OpBatch.
+
+    ``order``     : sorted index -> original flat op index (gather map)
+    ``seg_start`` : bool[N], True at the first op of each chain
+    ``seg_id``    : chain id of each sorted op (== cumsum(seg_start)-1)
+    ``pos``       : position of the op inside its chain (ts order)
+    ``seg_end``   : True at the last op of each chain
+    ``n_chains``  : traced scalar, number of distinct chains
+    ``max_len``   : traced scalar, longest chain (lockstep round count)
+    """
+
+    order: jnp.ndarray
+    seg_start: jnp.ndarray
+    seg_id: jnp.ndarray
+    pos: jnp.ndarray
+    seg_end: jnp.ndarray
+    n_chains: jnp.ndarray
+    max_len: jnp.ndarray
+
+    def take(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Gather a flat (pre-sort) per-op array into sorted chain order."""
+        return jnp.take(x, self.order, axis=0)
+
+
+def restructure(ops: OpBatch, pad_uid: int) -> Tuple[OpBatch, Chains]:
+    """Sort the op batch into operation chains.
+
+    Invalid (padding) ops are routed to the padding chain (uid = pad_uid) and
+    sort to the end; chain order within a state follows (ts, slot) so that a
+    transaction's intra-state ops keep their registration order.
+    """
+    uid = jnp.where(ops.valid, ops.uid, pad_uid)
+    order = jnp.lexsort((ops.slot, ops.ts, uid))  # uid major, ts, slot minor
+    uid_s = jnp.take(uid, order)
+    n = uid.shape[0]
+
+    seg_start = jnp.concatenate(
+        [jnp.ones((1,), bool), uid_s[1:] != uid_s[:-1]])
+    seg_id = jnp.cumsum(seg_start.astype(jnp.int32)) - 1
+    idx = jnp.arange(n, dtype=jnp.int32)
+    start_idx = jax.lax.cummax(jnp.where(seg_start, idx, 0))
+    pos = idx - start_idx
+    seg_end = jnp.concatenate(
+        [uid_s[1:] != uid_s[:-1], jnp.ones((1,), bool)])
+
+    sorted_ops = OpBatch(
+        uid=uid_s,
+        ts=jnp.take(ops.ts, order),
+        txn=jnp.take(ops.txn, order),
+        slot=jnp.take(ops.slot, order),
+        kind=jnp.take(ops.kind, order),
+        fun=jnp.take(ops.fun, order),
+        gate=jnp.take(ops.gate, order),
+        operand=jnp.take(ops.operand, order, axis=0),
+        valid=jnp.take(ops.valid, order),
+    )
+    chains = Chains(
+        order=order,
+        seg_start=seg_start,
+        seg_id=seg_id,
+        pos=pos,
+        seg_end=seg_end,
+        n_chains=seg_id[-1] + 1,
+        max_len=jnp.max(pos) + 1,
+    )
+    return sorted_ops, chains
+
+
+def segmented_scan_affine(a: jnp.ndarray, b: jnp.ndarray,
+                          seg_start: jnp.ndarray,
+                          exclusive: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Segmented scan of affine maps f(v) = a*v + b under composition.
+
+    Composition (applied left-to-right): (a2,b2)∘(a1,b1) = (a2*a1, a2*b1+b2).
+    Returns per-op (A, B) such that the state seen by op i within its chain is
+    A_i * v0 + B_i (exclusive) — the paper's multiversion value at ts_i.
+
+    Pure-jnp reference path; the Pallas kernel in ``repro.kernels.segscan``
+    implements the same contract for the TPU target.
+    """
+    flag = seg_start
+
+    def combine(x, y):
+        f1, a1, b1 = x
+        f2, a2, b2 = y
+        f2e = f2[..., None]
+        a = jnp.where(f2e, a2, a2 * a1)
+        b = jnp.where(f2e, b2, a2 * b1 + b2)
+        return (f1 | f2, a, b)
+
+    _, a_inc, b_inc = jax.lax.associative_scan(combine, (flag, a, b))
+    if not exclusive:
+        return a_inc, b_inc
+    # shift right within segments: identity at segment starts.
+    ident_a = jnp.ones_like(a[:1])
+    ident_b = jnp.zeros_like(b[:1])
+    a_exc = jnp.concatenate([ident_a, a_inc[:-1]], axis=0)
+    b_exc = jnp.concatenate([ident_b, b_inc[:-1]], axis=0)
+    a_exc = jnp.where(seg_start[:, None], jnp.ones_like(a_exc), a_exc)
+    b_exc = jnp.where(seg_start[:, None], jnp.zeros_like(b_exc), b_exc)
+    return a_exc, b_exc
+
+
+def segmented_scan_max(m: jnp.ndarray, seg_start: jnp.ndarray,
+                       exclusive: bool = True) -> jnp.ndarray:
+    """Segmented running max (for max-type tables, e.g. LPC sketches)."""
+    neg = jnp.full_like(m, -jnp.inf)
+    flag = seg_start
+
+    def combine(x, y):
+        f1, m1 = x
+        f2, m2 = y
+        return (f1 | f2, jnp.where(f2[..., None], m2, jnp.maximum(m1, m2)))
+
+    _, m_inc = jax.lax.associative_scan(combine, (flag, m))
+    if not exclusive:
+        return m_inc
+    m_exc = jnp.concatenate([neg[:1], m_inc[:-1]], axis=0)
+    return jnp.where(seg_start[:, None], neg, m_exc)

@@ -1,0 +1,110 @@
+"""Dual-mode scheduling (paper §IV-B, D1).
+
+One engine *step* processes exactly one punctuation interval:
+
+  compute mode      vmapped PRE_PROCESS + op registration into blotters
+  (TXN_START)       punctuation boundary — barrier analogue is the data
+                    dependence between phases inside one jitted function
+  state-access mode restructure + evaluate the postponed transaction batch
+  compute mode      vmapped POST_PROCESS over stored events + access results
+
+The punctuation interval is the leading batch axis; the progress controller
+assigns monotonically increasing timestamps (the paper's fetch&add counter
+becomes ``ts_base + arange``: SPMD-deterministic and contention-free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blotter import AppSpec, build_opbatch
+from .engines import EngineStats, evaluate
+from .types import OpResults, StateStore
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    scheme: str = "tstream"
+    n_partitions: int = 16
+    max_dep_levels: int = 3
+    use_pallas: bool = False
+    abort_repass: bool = False   # re-run with aborted txns masked (§IV-C2)
+
+
+class DualModeEngine:
+    """The TStream engine bound to one application."""
+
+    def __init__(self, app: AppSpec, store: StateStore,
+                 cfg: EngineConfig = EngineConfig()):
+        self.app = app
+        self.cfg = cfg
+        self.init_store = store
+        self._step = jax.jit(partial(_step_impl, app=app, cfg=cfg))
+
+    def step(self, values: jnp.ndarray, events: Dict[str, jnp.ndarray],
+             ts_base) -> Tuple[Dict, jnp.ndarray, EngineStats]:
+        """Process one punctuation interval. Returns (outputs, values', stats)."""
+        store = dataclasses.replace(self.init_store, values=values)
+        return self._step(store, events, jnp.asarray(ts_base, jnp.int32))
+
+    def run_stream(self, values, event_stream, punct_interval: int):
+        """Drive a host-side event stream punctuation by punctuation."""
+        outs = []
+        ts = 0
+        for batch in _batches(event_stream, punct_interval):
+            out, values, stats = self.step(values, batch, ts)
+            ts += punct_interval
+            outs.append(out)
+        return outs, values
+
+
+def _batches(stream: Dict[str, np.ndarray], interval: int):
+    n = len(next(iter(stream.values())))
+    for i in range(0, n - n % interval, interval):
+        yield {k: jnp.asarray(v[i : i + interval]) for k, v in stream.items()}
+
+
+def _step_impl(store: StateStore, events, ts_base, *, app: AppSpec,
+               cfg: EngineConfig):
+    # -- compute mode: pre-process + postpone state access (D1) ------------
+    ops, ebs = build_opbatch(app, store, events, ts_base)
+
+    # -- state access mode: dynamic restructuring execution (D2) -----------
+    res, values, stats = evaluate(
+        store, ops, app.funs, cfg.scheme,
+        associative_only=app.associative_only, has_gates=app.has_gates,
+        n_partitions=cfg.n_partitions, max_dep_levels=cfg.max_dep_levels,
+        use_pallas=cfg.use_pallas)
+
+    if cfg.abort_repass and app.may_abort:
+        # Abort handling without rollback: a transaction whose ops failed is
+        # masked out and the batch is re-evaluated from the pre-batch values.
+        # (Addresses the paper's §IV-F multi-write rollback limitation.)
+        some = jax.tree_util.tree_leaves(events)[0]
+        batch = some.shape[0]
+        succ = res["success"].reshape(batch, app.max_ops)
+        valid = ops.valid.reshape(batch, app.max_ops)
+        txn_ok = jnp.all(succ | ~valid, axis=1)
+        keep = jnp.repeat(txn_ok, app.max_ops)
+        ops2 = dataclasses.replace(ops, valid=ops.valid & keep)
+        res, values, stats = evaluate(
+            store, ops2, app.funs, cfg.scheme,
+            associative_only=app.associative_only, has_gates=app.has_gates,
+            n_partitions=cfg.n_partitions, max_dep_levels=cfg.max_dep_levels,
+            use_pallas=cfg.use_pallas)
+
+    # -- compute mode resumes: post-process stored events -------------------
+    some = jax.tree_util.tree_leaves(events)[0]
+    batch = some.shape[0]
+    shaped = OpResults(
+        pre=res["pre"].reshape(batch, app.max_ops, app.width),
+        post=res["post"].reshape(batch, app.max_ops, app.width),
+        success=res["success"].reshape(batch, app.max_ops),
+    )
+    out = jax.vmap(app.post_process)(ebs, shaped)
+    return out, values, stats

@@ -1,0 +1,169 @@
+"""Chain-shard layouts over a device mesh — the paper's NUMA-aware
+processing configurations (§IV-E) mapped to SPMD (DESIGN.md §2):
+
+  shared-nothing     state slots owned by one device (contiguous after an
+                     ownership permutation); chains evaluate where their
+                     state lives; **zero collectives**
+  shared-per-socket  state owned per 'socket' mesh axis, work split across
+                     the socket's 'core' axis -> intra-socket psum only
+  shared-everything  state replicated; work split across all devices ->
+                     global psum of state deltas (cross-socket traffic)
+
+All three evaluate the same restructured batch with identical results;
+compiled collective bytes per layout quantify the paper's Fig. 14 finding
+(shared-nothing wins; cross-socket communication hurts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .engines import eval_tstream_scan
+from .types import FunSpec, OpBatch, StateStore, make_store
+
+LAYOUTS = ("shared_nothing", "shared_per_socket", "shared_everything")
+
+
+def _owner_permute_store(store: StateStore, n_owners: int):
+    """Pad slots to a multiple of n_owners and build old->new slot maps so
+    owner(uid) = uid % n_owners becomes a *contiguous* range per owner."""
+    s = store.n_slots
+    per = -(-s // n_owners)
+    s_pad = per * n_owners
+    old = jnp.arange(s)
+    new = (old % n_owners) * per + old // n_owners
+    fwd = jnp.full((s + 1,), s_pad, jnp.int32).at[old].set(
+        new.astype(jnp.int32))          # old uid -> new uid (pad -> s_pad)
+    values = jnp.zeros((s_pad + 1, store.values.shape[1]),
+                       store.values.dtype)
+    values = values.at[fwd[:-1]].set(store.values[:-1])
+    inv = jnp.zeros((s_pad,), jnp.int32).at[new].set(old.astype(jnp.int32))
+    return values, fwd, inv, per, s_pad
+
+
+def _remap_ops(ops: OpBatch, fwd: jnp.ndarray, pad_new: int) -> OpBatch:
+    uid = jnp.where(ops.valid, jnp.take(fwd, ops.uid), pad_new)
+    return dataclasses.replace(ops, uid=uid)
+
+
+def evaluate_sharded(store: StateStore, ops: OpBatch,
+                     funs: Tuple[FunSpec, ...], mesh, layout: str):
+    """TStream fast-path under a chain-shard layout.
+
+    Returns values in the *original* slot order (un-permuted) for
+    comparison; the layout governs where evaluation runs and which
+    collectives reconcile state.
+    """
+    assert layout in LAYOUTS, layout
+    # local stores merge tables into one slot range; per-slot max-type info
+    # survives only for homogeneous stores (fine for GS/SL/OB; not TP).
+    assert len(set(store.table_is_max)) == 1, \
+        "sharded layouts require a homogeneous table family"
+    from jax.experimental.shard_map import shard_map
+
+    n_dev = mesh.size
+    axes = mesh.axis_names
+    n_sockets = mesh.shape.get("socket", 1)
+    n_owners = {"shared_nothing": n_dev,
+                "shared_per_socket": n_sockets,
+                "shared_everything": 1}[layout]
+    n_owners = max(n_owners, 1)
+
+    values, fwd, inv, per, s_pad = _owner_permute_store(store, max(n_owners,
+                                                                   1))
+    rops = _remap_ops(ops, fwd, s_pad)
+
+    def my_dev():
+        idx = jax.lax.axis_index(axes[0])
+        for a in axes[1:]:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        return idx
+
+    if layout == "shared_nothing":
+        # local state block [per+1, W]; ops with non-local uid -> local pad
+        def body(vals_local, ops_rep):
+            dev = my_dev()
+            base = dev * per
+            local_uid = ops_rep.uid - base
+            is_local = (local_uid >= 0) & (local_uid < per) & ops_rep.valid
+            lops = dataclasses.replace(
+                ops_rep, uid=jnp.where(is_local, local_uid, per),
+                valid=is_local)
+            lstore = make_store([per], store.values.shape[1],
+                                init=vals_local)
+            lstore = dataclasses.replace(
+                lstore, table_is_max=(any(store.table_is_max),),
+                table_base=(0,), table_capacity=(per,))
+            _, new_vals, _ = eval_tstream_scan(lstore, lops, funs)
+            return new_vals
+
+        # values [s_pad+1] -> per-device blocks [per+1]: drop global pad row,
+        # reshape to [n_dev, per], append a local pad row per device.
+        blocks = values[:-1].reshape(n_dev, per,
+                                     values.shape[1])
+        blocks = jnp.concatenate(
+            [blocks, jnp.zeros((n_dev, 1, values.shape[1]),
+                               values.dtype)], axis=1)
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(P(axes), P()), out_specs=P(axes),
+                       check_rep=False)
+        out_blocks = fn(blocks.reshape(n_dev * (per + 1), values.shape[1]),
+                        rops)
+        out = out_blocks.reshape(n_dev, per + 1, -1)[:, :per].reshape(
+            n_dev * per, -1)
+        return jnp.take(out, fwd[:-1], axis=0)  # back to original slot order
+
+    if layout == "shared_per_socket":
+        core_axis = axes[-1]
+
+        def body(vals, ops_rep):
+            sock = jax.lax.axis_index(axes[0])
+            core = jax.lax.axis_index(core_axis)
+            n_core = mesh.shape[core_axis]
+            base = sock * per
+            local_uid = ops_rep.uid - base
+            mine = (local_uid >= 0) & (local_uid < per) & ops_rep.valid \
+                & ((ops_rep.uid % n_core) == core)   # split chains in socket
+            lops = dataclasses.replace(
+                ops_rep, uid=jnp.where(mine, local_uid, per), valid=mine)
+            lstore = make_store([per], store.values.shape[1], init=vals)
+            lstore = dataclasses.replace(
+                lstore, table_is_max=(any(store.table_is_max),))
+            _, new_vals, _ = eval_tstream_scan(lstore, lops, funs)
+            delta = new_vals - vals
+            return vals + jax.lax.psum(delta, core_axis)  # intra-socket
+
+        blocks = values[:-1].reshape(n_sockets, per, values.shape[1])
+        blocks = jnp.concatenate(
+            [blocks, jnp.zeros((n_sockets, 1, values.shape[1]),
+                               values.dtype)], axis=1)
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(P(axes[0]), P()), out_specs=P(axes[0]),
+                       check_rep=False)
+        out_blocks = fn(blocks.reshape(n_sockets * (per + 1),
+                                       values.shape[1]), rops)
+        out = out_blocks.reshape(n_sockets, per + 1, -1)[:, :per].reshape(
+            n_sockets * per, -1)
+        return jnp.take(out, fwd[:-1], axis=0)
+
+    # shared_everything: replicated state, global psum merge
+    def body(vals, ops_rep):
+        dev = my_dev()
+        mine = ((ops_rep.uid % n_dev) == dev) & ops_rep.valid
+        lops = dataclasses.replace(
+            ops_rep, uid=jnp.where(mine, ops_rep.uid, s_pad), valid=mine)
+        lstore = make_store([s_pad], store.values.shape[1], init=vals)
+        lstore = dataclasses.replace(
+            lstore, table_is_max=(any(store.table_is_max),))
+        _, new_vals, _ = eval_tstream_scan(lstore, lops, funs)
+        delta = new_vals - vals
+        return vals + jax.lax.psum(delta, axes)       # global merge
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P(), P()), out_specs=P(),
+                   check_rep=False)
+    out = fn(values, rops)
+    return jnp.take(out[:-1], fwd[:-1], axis=0)

@@ -1,0 +1,196 @@
+"""Core datatypes for TStream-JAX.
+
+The paper models the processing of one input event at one operator as a
+*state transaction* (Definition 1): a set of READ / WRITE / READ_MODIFY
+operations over shared keyed state, which must be scheduled conflict-
+equivalent to timestamp order (Definition 2).
+
+On TPU we represent a punctuation interval's worth of transactions as a
+structure-of-arrays ``OpBatch``: one flat row per *operation* (the unit the
+paper's dynamic restructuring decomposes transactions into).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OpKind(enum.IntEnum):
+    """Atomic operation kinds (paper Table III)."""
+
+    NOP = 0
+    READ = 1
+    WRITE = 2
+    READ_MODIFY = 3
+
+
+# ---------------------------------------------------------------------------
+# Fun registry — the paper's system-provided / user-defined ``Fun`` family.
+#
+# ``apply``  : (pre[W], operand[W]) -> (post[W], success: bool scalar)
+# ``affine`` : operand[W] -> (a[W], b[W]) such that post == a * pre + b.
+#              Present only when the fun is *associative-affine*; these ops are
+#              eligible for the segmented-scan fast path (log-depth chains).
+# ``is_max`` : post == max(pre, operand) — the other associative family we
+#              support (used for the TP vehicle-count LPC sketch).
+# Funs with neither form are evaluated on the sequential-within-chain
+# (lockstep) path — exactly the paper's one-thread-walks-one-chain semantics.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FunSpec:
+    name: str
+    apply: Callable[[jnp.ndarray, jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]]
+    affine: Optional[Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]]] = None
+    is_max: bool = False
+
+    @property
+    def associative(self) -> bool:
+        return self.affine is not None or self.is_max
+
+
+def _f_nop(pre, operand):
+    return pre, jnp.asarray(True)
+
+
+def _f_read(pre, operand):
+    return pre, jnp.asarray(True)
+
+
+def _f_put(pre, operand):
+    return operand, jnp.asarray(True)
+
+
+def _f_add(pre, operand):
+    return pre + operand, jnp.asarray(True)
+
+
+def _f_max(pre, operand):
+    return jnp.maximum(pre, operand), jnp.asarray(True)
+
+
+def _f_take(pre, operand):
+    """Bounded take on lane 0: succeed iff pre[0] >= operand[0] (SL debit)."""
+    ok = pre[0] >= operand[0]
+    return pre - jnp.where(ok, operand, jnp.zeros_like(operand)), ok
+
+
+F_NOP = FunSpec("nop", _f_nop, affine=lambda o: (jnp.ones_like(o), jnp.zeros_like(o)))
+F_READ = FunSpec("read", _f_read, affine=lambda o: (jnp.ones_like(o), jnp.zeros_like(o)))
+F_PUT = FunSpec("put", _f_put, affine=lambda o: (jnp.zeros_like(o), o))
+F_ADD = FunSpec("add", _f_add, affine=lambda o: (jnp.ones_like(o), o))
+F_MAX = FunSpec("max", _f_max, is_max=True)
+F_TAKE = FunSpec("take", _f_take)  # conditional: lockstep path only
+
+CORE_FUNS: Tuple[FunSpec, ...] = (F_NOP, F_READ, F_PUT, F_ADD, F_MAX, F_TAKE)
+ASSOC_FUNS: Tuple[FunSpec, ...] = (F_NOP, F_READ, F_PUT, F_ADD, F_MAX)
+
+
+# ---------------------------------------------------------------------------
+# OpBatch — flattened decomposed operations of one punctuation interval.
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OpBatch:
+    """SoA of N = batch * max_ops decomposed operations.
+
+    ``uid``  : global state id = table_base + key  (the paper's "targeted state")
+    ``ts``   : transaction timestamp (the triggering event's ts)
+    ``txn``  : transaction index within the interval (== event row)
+    ``slot`` : op slot within its transaction (position in EventBlotter)
+    ``fun``  : index into the app's fun tuple
+    ``gate`` : flat pre-sort op index (txn * max_ops + slot) of the *mate* op
+               whose success gates this op (paper's CFun on a different key);
+               -1 when ungated.  F2 (determined read/write sets) makes this
+               computable at decomposition time.
+    ``operand``: [N, W] parameter lanes.
+    ``valid``  : padding mask (False rows are NOPs on the padding chain).
+    """
+
+    uid: jnp.ndarray      # i32[N]
+    ts: jnp.ndarray       # i32[N]
+    txn: jnp.ndarray      # i32[N]
+    slot: jnp.ndarray     # i32[N]
+    kind: jnp.ndarray     # i32[N]
+    fun: jnp.ndarray      # i32[N]
+    gate: jnp.ndarray     # i32[N]
+    operand: jnp.ndarray  # f32[N, W]
+    valid: jnp.ndarray    # bool[N]
+
+    @property
+    def n_ops(self) -> int:
+        return self.uid.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.operand.shape[-1]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OpResults:
+    """Per-op outcomes, aligned with the *pre-sort* (txn, slot) layout.
+
+    ``pre``     : state value observed at the op's timestamp (the paper's
+                  multiversion read — the version with largest ts' < ts).
+    ``post``    : value after the op applied.
+    ``success`` : Fun/CFun outcome; used for abort notification ("rejected").
+    """
+
+    pre: jnp.ndarray      # f32[B, max_ops, W]
+    post: jnp.ndarray     # f32[B, max_ops, W]
+    success: jnp.ndarray  # bool[B, max_ops]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class StateStore:
+    """Fixed-capacity keyed tables, concatenated into one value array.
+
+    ``values[S+1, W]`` — slot S is the padding chain (all invalid ops target
+    it).  Table t owns slots [base[t], base[t] + capacity[t]).
+    ``kind_max`` marks tables whose RMW family is max-type (LPC sketches).
+    """
+
+    values: jnp.ndarray                    # f32[S+1, W]
+    table_base: tuple = dataclasses.field(metadata=dict(static=True), default=())
+    table_capacity: tuple = dataclasses.field(metadata=dict(static=True), default=())
+    table_is_max: tuple = dataclasses.field(metadata=dict(static=True), default=())
+
+    @property
+    def n_slots(self) -> int:
+        return self.values.shape[0] - 1
+
+    @property
+    def pad_uid(self) -> int:
+        return self.values.shape[0] - 1
+
+    def uid_of(self, table: int, key: jnp.ndarray) -> jnp.ndarray:
+        return self.table_base[table] + key
+
+    def uid_is_max(self) -> jnp.ndarray:
+        """bool[S+1]: whether each slot belongs to a max-type table."""
+        flags = jnp.zeros(self.values.shape[0], dtype=bool)
+        for t, (b, c) in enumerate(zip(self.table_base, self.table_capacity)):
+            if self.table_is_max[t]:
+                flags = flags.at[b : b + c].set(True)
+        return flags
+
+
+def make_store(capacities: Sequence[int], width: int,
+               is_max: Sequence[bool] | None = None,
+               init: jnp.ndarray | None = None) -> StateStore:
+    """Build a StateStore with the given per-table capacities."""
+    caps = tuple(int(c) for c in capacities)
+    bases, acc = [], 0
+    for c in caps:
+        bases.append(acc)
+        acc += c
+    vals = jnp.zeros((acc + 1, width), jnp.float32) if init is None else init
+    assert vals.shape == (acc + 1, width), (vals.shape, acc + 1, width)
+    im = tuple(bool(x) for x in (is_max or [False] * len(caps)))
+    return StateStore(values=vals, table_base=tuple(bases),
+                      table_capacity=caps, table_is_max=im)

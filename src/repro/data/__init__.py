@@ -1,0 +1,2 @@
+from .pipeline import (PipelineConfig, StreamingPipeline, SyntheticCorpus,
+                       STATS_APP)

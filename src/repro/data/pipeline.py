@@ -1,0 +1,134 @@
+"""Streaming tokenized data pipeline with TStream-managed online statistics.
+
+This is where the paper's engine is a *framework feature*, not a demo: the
+ingestion stream maintains concurrent keyed mutable state —
+
+  * per-domain token counts        (READ_MODIFY add — mixture re-weighting)
+  * per-domain duplicate counters  (shingle-hash dedup via the hash_probe
+                                    kernel's table)
+
+Document-ingest events from all ingest shards are state transactions over
+these shared tables; the dual-mode engine evaluates each punctuation batch
+on-device with Definition-2 consistency.  No per-shard key partitioning is
+required — exactly the paper's operational win over partitioned DSPSs.
+
+Training batches are a pure function of (seed, step): the FT contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blotter import AppSpec
+from repro.core.scheduler import DualModeEngine, EngineConfig
+from repro.core.types import ASSOC_FUNS, make_store
+
+N_DOMAINS = 16
+W = 2  # value lanes: [token_count, doc_count]
+
+
+def _stats_store(**_):
+    return make_store([N_DOMAINS, N_DOMAINS], W)
+
+
+def _gen(rng, n, **_):
+    return dict(domain=rng.integers(0, N_DOMAINS, n).astype(np.int32),
+                n_tokens=rng.integers(100, 2000, n).astype(np.float32),
+                is_dup=(rng.random(n) < 0.1))
+
+
+def _pre(ev):
+    return ev
+
+
+def _access(blt, eb):
+    # table 0: per-domain token/doc counters
+    op = jnp.stack([eb["n_tokens"], jnp.float32(1.0)])
+    blt.read_modify(0, eb["domain"], op, "add")
+    # table 1: per-domain duplicate counters
+    dup = jnp.stack([eb["n_tokens"] * eb["is_dup"],
+                     eb["is_dup"].astype(jnp.float32)])
+    blt.read_modify(1, eb["domain"], dup, "add")
+    blt.read(0, eb["domain"])
+
+
+def _post(eb, res):
+    return dict(domain_tokens=res.post[0, 0], accepted=~eb["is_dup"])
+
+
+STATS_APP = AppSpec(
+    name="ingest_stats", funs=ASSOC_FUNS, max_ops=4, width=W,
+    make_store=_stats_store, gen_events=_gen, pre_process=_pre,
+    state_access=_access, post_process=_post,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    vocab: int = 256
+    seq_len: int = 128
+    batch: int = 8
+    seed: int = 0
+    punct_interval: int = 64
+
+
+class SyntheticCorpus:
+    """Deterministic multi-domain corpus (zipf unigrams per domain)."""
+
+    def __init__(self, vocab: int, seed: int = 0):
+        self.vocab = vocab
+        self.seed = seed
+
+    def doc(self, domain: int, idx: int, length: int) -> np.ndarray:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, domain, idx]))
+        base = (domain * 997) % self.vocab
+        toks = rng.zipf(1.5, size=length) % self.vocab
+        return ((toks + base) % self.vocab).astype(np.int32)
+
+
+class StreamingPipeline:
+    """Packs documents into fixed-length training sequences and keeps the
+    TStream stats engine updated per ingest batch."""
+
+    def __init__(self, cfg: PipelineConfig):
+        self.cfg = cfg
+        self.corpus = SyntheticCorpus(cfg.vocab, cfg.seed)
+        store = _stats_store()
+        self.engine = DualModeEngine(STATS_APP, store,
+                                     EngineConfig(scheme="tstream"))
+        self.stats_values = store.values
+        self._ts = 0
+
+    def ingest(self, rng: np.random.Generator, n_docs: int) -> Dict:
+        """One punctuation interval of ingest events -> engine step."""
+        events = {k: jnp.asarray(v) for k, v in _gen(rng, n_docs).items()}
+        out, self.stats_values, _ = self.engine.step(
+            self.stats_values, events, self._ts)
+        self._ts += n_docs
+        return out
+
+    def mixture_weights(self) -> np.ndarray:
+        """Current inverse-duplication mixture weights from shared state."""
+        vals = np.asarray(self.stats_values)
+        toks = vals[:N_DOMAINS, 0] + 1.0
+        dups = vals[N_DOMAINS : 2 * N_DOMAINS, 0]
+        w = toks / (toks + 2.0 * dups)
+        return w / w.sum()
+
+    def batch_for_step(self, step: int) -> Dict[str, jnp.ndarray]:
+        """Deterministic (seed, step) -> batch; FT replay contract."""
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, 7, step]))
+        seqs = np.empty((cfg.batch, cfg.seq_len + 1), np.int32)
+        for b in range(cfg.batch):
+            dom = int(rng.integers(0, N_DOMAINS))
+            doc = self.corpus.doc(dom, int(rng.integers(0, 1 << 20)),
+                                  cfg.seq_len + 1)
+            seqs[b] = doc
+        return dict(tokens=jnp.asarray(seqs[:, :-1]),
+                    labels=jnp.asarray(seqs[:, 1:]))

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for TStream's state-access hot spots.
+
+segscan    — segmented scans evaluating operation chains (the D2 hot loop)
+hash_probe — one-hot-matmul bucketed hash probe (sparse-key index lookup)
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper) and ref.py (pure-jnp oracle); validated in interpret mode on CPU.
+"""

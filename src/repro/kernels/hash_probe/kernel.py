@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: bucketed cuckoo-style hash probe (key -> slot).
+
+The paper's time-breakdown (§VI-D) finds index lookup to be the residual
+bottleneck once locking is removed (the *No-Lock* "Others" share).  TStream's
+state tables use direct addressing for dense keys; for *sparse* keys (the
+framework's data-pipeline dedup / per-domain statistics), this kernel
+resolves key -> table slot.
+
+TPU adaptation: TPUs have no efficient random gather inside a kernel, so the
+probe is reformulated as a **one-hot matmul gather** (MXU-friendly): a query
+block builds a one-hot [BLK, n_buckets] matrix and multiplies it against the
+bucketed key table [n_buckets, assoc].  Key equality is checked exactly by
+splitting 32-bit keys into two 16-bit halves (each exact in f32).  Linear
+probing over MAX_PROBES consecutive buckets handles overflow.
+
+VMEM: table 8192×8 ×2 halves ×4B = 512 KiB + one-hot BLK×8192×4B (BLK=128:
+4 MiB) — fits; larger tables tile the bucket axis via the grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 128
+ASSOC = 8
+MAX_PROBES = 4
+_MULT = 2654435761  # Knuth multiplicative hash
+
+
+def bucket_of(key: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+    h = (key.astype(jnp.uint32) * jnp.uint32(_MULT)) >> jnp.uint32(16)
+    return (h % jnp.uint32(n_buckets)).astype(jnp.int32)
+
+
+def _probe_kernel(q_ref, tlo_ref, thi_ref, out_ref, *, n_buckets: int):
+    q = q_ref[...]                       # [BLK, 1] i32 query keys
+    qk = q[:, 0]
+    qlo = (qk & 0xFFFF).astype(jnp.float32)[:, None]        # [BLK, 1]
+    qhi = ((qk >> 16) & 0xFFFF).astype(jnp.float32)[:, None]
+    tlo = tlo_ref[...]                   # [n_buckets, ASSOC] f32 halves
+    thi = thi_ref[...]
+
+    base = bucket_of(qk, n_buckets)      # [BLK]
+    found_slot = jnp.full((q.shape[0],), -1, jnp.int32)
+    for p in range(MAX_PROBES):
+        bkt = (base + p) % n_buckets
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], n_buckets), 1)
+                  == bkt[:, None]).astype(jnp.float32)
+        cand_lo = jnp.dot(onehot, tlo)   # [BLK, ASSOC] exact 16-bit values
+        cand_hi = jnp.dot(onehot, thi)
+        match = (cand_lo == qlo) & (cand_hi == qhi)
+        lane = jnp.argmax(match, axis=1).astype(jnp.int32)
+        hit = jnp.any(match, axis=1)
+        slot = bkt * ASSOC + lane
+        found_slot = jnp.where((found_slot < 0) & hit, slot, found_slot)
+    out_ref[...] = found_slot[:, None]
+
+
+def hash_probe_pallas(keys: jnp.ndarray, table_lo: jnp.ndarray,
+                      table_hi: jnp.ndarray, *, interpret: bool = True):
+    """keys: i32[N] (N % BLOCK_Q == 0); table halves f32[n_buckets, ASSOC].
+
+    Returns i32[N] slot index, -1 if absent.
+    """
+    n = keys.shape[0]
+    n_buckets = table_lo.shape[0]
+    assert n % BLOCK_Q == 0 and table_lo.shape == (n_buckets, ASSOC)
+    kernel = functools.partial(_probe_kernel, n_buckets=n_buckets)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n // BLOCK_Q,),
+        in_specs=[pl.BlockSpec((BLOCK_Q, 1), lambda g: (g, 0)),
+                  pl.BlockSpec((n_buckets, ASSOC), lambda g: (0, 0)),
+                  pl.BlockSpec((n_buckets, ASSOC), lambda g: (0, 0))],
+        out_specs=pl.BlockSpec((BLOCK_Q, 1), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        interpret=interpret,
+    )(keys[:, None], table_lo, table_hi)
+    return out[:, 0]

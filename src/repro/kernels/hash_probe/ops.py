@@ -1,0 +1,22 @@
+"""Jit'd wrapper for the hash-probe kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as K
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def hash_probe(keys: jnp.ndarray, table_lo: jnp.ndarray,
+               table_hi: jnp.ndarray, interpret: bool | None = None):
+    """keys i32[N] -> slot i32[N] (-1 if absent); pads N to the block size."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = keys.shape[0]
+    rows = -(-n // K.BLOCK_Q) * K.BLOCK_Q
+    kp = jnp.pad(keys.astype(jnp.int32), (0, rows - n), constant_values=0)
+    out = K.hash_probe_pallas(kp, table_lo, table_hi, interpret=interpret)
+    return out[:n]

@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for the hash-probe kernel, plus table construction."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import ASSOC, MAX_PROBES, _MULT
+
+
+def bucket_of_np(key: np.ndarray, n_buckets: int) -> np.ndarray:
+    h = (key.astype(np.uint64) * np.uint64(_MULT)) & np.uint64(0xFFFFFFFF)
+    return ((h >> np.uint64(16)) % np.uint64(n_buckets)).astype(np.int32)
+
+
+def build_table(keys: np.ndarray, n_buckets: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Insert keys (distinct, int32 >= 0) with linear probing over buckets.
+
+    Returns the two exact-f32 16-bit half tables used by kernel and ref.
+    """
+    table = np.full((n_buckets, ASSOC), -1, np.int64)
+    for k in keys.astype(np.int64):
+        b = int(bucket_of_np(np.asarray(k), n_buckets))
+        for p in range(MAX_PROBES):
+            row = (b + p) % n_buckets
+            free = np.flatnonzero(table[row] < 0)
+            if len(free):
+                table[row, free[0]] = k
+                break
+        else:
+            raise RuntimeError("hash table overflow; grow n_buckets")
+    lo = (table & 0xFFFF).astype(np.float32)
+    hi = ((table >> 16) & 0xFFFF).astype(np.float32)
+    # empty slots (-1) become (0xFFFF, 0xFFFF) halves of -1's two's
+    # complement; queries are >= 0 so they never match.
+    return lo, hi
+
+
+def hash_probe_ref(keys: jnp.ndarray, table_lo: jnp.ndarray,
+                   table_hi: jnp.ndarray) -> jnp.ndarray:
+    """Oracle: same probing, via direct jnp indexing (no one-hot matmul)."""
+    n_buckets = table_lo.shape[0]
+    qk = keys.astype(jnp.int32)
+    qlo = (qk & 0xFFFF).astype(jnp.float32)[:, None]
+    qhi = ((qk >> 16) & 0xFFFF).astype(jnp.float32)[:, None]
+    h = (qk.astype(jnp.uint32) * jnp.uint32(_MULT)) >> jnp.uint32(16)
+    base = (h % jnp.uint32(n_buckets)).astype(jnp.int32)
+    found = jnp.full(qk.shape, -1, jnp.int32)
+    for p in range(MAX_PROBES):
+        bkt = (base + p) % n_buckets
+        cand_lo = jnp.take(table_lo, bkt, axis=0)
+        cand_hi = jnp.take(table_hi, bkt, axis=0)
+        match = (cand_lo == qlo) & (cand_hi == qhi)
+        lane = jnp.argmax(match, axis=1).astype(jnp.int32)
+        hit = jnp.any(match, axis=1)
+        found = jnp.where((found < 0) & hit, bkt * ASSOC + lane, found)
+    return found

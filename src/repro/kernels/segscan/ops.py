@@ -1,0 +1,60 @@
+"""Jit'd wrappers: pad to kernel tiling, dispatch, slice back.
+
+On a CPU host the kernel executes in interpret mode (Python emulation of the
+kernel body); on TPU set ``interpret=False`` (the default flips on backend).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as K
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad(x: jnp.ndarray, rows: int, lanes: int, fill) -> jnp.ndarray:
+    n, w = x.shape
+    return jnp.pad(x, ((0, rows - n), (0, lanes - w)), constant_values=fill)
+
+
+@partial(jax.jit, static_argnames=("exclusive", "interpret"))
+def segscan_affine(a: jnp.ndarray, b: jnp.ndarray, seg_start: jnp.ndarray,
+                   exclusive: bool = True, interpret: bool | None = None):
+    """Exclusive segmented affine scan via the Pallas kernel.
+
+    a, b: f32[N, W]; seg_start: bool[N].  Returns (A, B) f32[N, W].
+    """
+    assert exclusive, "kernel implements the exclusive scan"
+    interpret = _default_interpret() if interpret is None else interpret
+    n, w = a.shape
+    rows = -(-n // K.BLOCK_ROWS) * K.BLOCK_ROWS
+    f = jnp.broadcast_to(seg_start.astype(jnp.float32)[:, None],
+                         (n, K.LANES))
+    # padding rows form their own dead segment (flag=1) so the carry of the
+    # real data is not consumed by them
+    f = jnp.pad(f, ((0, rows - n), (0, 0)), constant_values=1.0)
+    ap = _pad(a.astype(jnp.float32), rows, K.LANES, 1.0)
+    bp = _pad(b.astype(jnp.float32), rows, K.LANES, 0.0)
+    A, B = K.segscan_affine_pallas(f, ap, bp, interpret=interpret)
+    return A[:n, :w], B[:n, :w]
+
+
+@partial(jax.jit, static_argnames=("exclusive", "interpret"))
+def segscan_max(m: jnp.ndarray, seg_start: jnp.ndarray,
+                exclusive: bool = True, interpret: bool | None = None):
+    """Exclusive segmented max scan via the Pallas kernel."""
+    assert exclusive, "kernel implements the exclusive scan"
+    interpret = _default_interpret() if interpret is None else interpret
+    n, w = m.shape
+    rows = -(-n // K.BLOCK_ROWS) * K.BLOCK_ROWS
+    f = jnp.broadcast_to(seg_start.astype(jnp.float32)[:, None],
+                         (n, K.LANES))
+    f = jnp.pad(f, ((0, rows - n), (0, 0)), constant_values=1.0)
+    mp = _pad(m.astype(jnp.float32), rows, K.LANES, 0.0)
+    M = K.segscan_max_pallas(f, mp, interpret=interpret)
+    return M[:n, :w]

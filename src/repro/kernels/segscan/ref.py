@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the segmented-scan kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.restructure import segmented_scan_affine, segmented_scan_max
+
+
+def segscan_affine_ref(flags, a, b):
+    """flags: bool[N] (or f32 >0), a/b: f32[N, W] -> exclusive (A, B)."""
+    f = jnp.asarray(flags).reshape(-1) > 0
+    return segmented_scan_affine(a, b, f, exclusive=True)
+
+
+def segscan_max_ref(flags, m):
+    f = jnp.asarray(flags).reshape(-1) > 0
+    return segmented_scan_max(m, f, exclusive=True)

@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: the SPMD
+partitioner must accept every sharding, the compiled module's
+memory_analysis shows the per-device footprint, and cost_analysis +
+HLO-collective parsing feed the roofline (EXPERIMENTS.md §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-34b --shape train_4k
+  python -m repro.launch.dryrun --arch deepseek-v3-671b --shape decode_32k \
+      --multi-pod --out results/
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+from collections import defaultdict
+
+import jax
+
+from repro.configs import get_arch
+from repro.models import SHAPE_BY_NAME, cell_is_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import StepConfig, build_step
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing (collective bytes are NOT in cost_analysis)
+# ---------------------------------------------------------------------------
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str, n_devices: int):
+    """Per-collective-kind byte totals + ring-algorithm wire-bytes estimate.
+
+    The SPMD-partitioned HLO is a *per-device* program, so instruction
+    result shapes are per-device buffer sizes.  Ring estimates per device:
+      all-reduce       2·b·(g-1)/g          (b = operand == result bytes)
+      all-gather       b_res·(g-1)/g        (b_res = gathered result)
+      reduce-scatter   b_res·(g-1)          (b_res = scattered result)
+      all-to-all       b·(g-1)/g
+      collective-permute  b
+    """
+    per_kind = defaultdict(int)
+    wire_per_device = 0.0
+    count = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        if nbytes == 0:
+            continue
+        per_kind[kind] += nbytes
+        count[kind] += 1
+        g = _GROUPS_RE.search(line)
+        if g:
+            gsize = len(g.group(1).split(","))
+        else:
+            g2 = _GROUPS_V2_RE.search(line)
+            gsize = int(g2.group(2)) if g2 else n_devices
+        gsize = max(gsize, 2)
+        frac = (gsize - 1) / gsize
+        if kind == "all-reduce":
+            wire_per_device += 2 * nbytes * frac
+        elif kind == "all-gather":
+            wire_per_device += nbytes * frac
+        elif kind == "reduce-scatter":
+            wire_per_device += nbytes * (gsize - 1)
+        elif kind == "all-to-all":
+            wire_per_device += nbytes * frac
+        else:  # collective-permute
+            wire_per_device += nbytes
+    return dict(per_kind=dict(per_kind), counts=dict(count),
+                wire_per_device=wire_per_device)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, remat="full",
+             seq_shard=True, opt_bf16=True, kv_chunk=1024,
+             expert_parallel=True, serving_head_pad=True, verbose=True):
+    import jax.numpy as jnp
+    from repro.optim import AdamWConfig
+
+    cfg = get_arch(arch)
+    shape = SHAPE_BY_NAME[shape_name]
+    ok, why = cell_is_applicable(cfg, shape)
+    if not ok:
+        return dict(arch=arch, shape=shape_name, multi_pod=multi_pod,
+                    skipped=True, reason=why)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    step_cfg = StepConfig(
+        remat=remat, seq_shard_acts=seq_shard, kv_chunk=kv_chunk,
+        expert_parallel=expert_parallel, serving_head_pad=serving_head_pad,
+        optimizer=AdamWConfig(
+            state_dtype=jnp.bfloat16 if opt_bf16 else jnp.float32))
+
+    t0 = time.time()
+    with mesh:
+        fn, specs = build_step(cfg, shape, mesh, step_cfg)
+        lowered = fn.lower(*specs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    from repro.launch.hlo_analysis import analyze_hlo
+    weighted = analyze_hlo(hlo, n_dev)
+
+    result = dict(
+        arch=arch, shape=shape_name, multi_pod=multi_pod, skipped=False,
+        n_devices=n_dev,
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        # naive (loop bodies counted once) — kept for reference
+        xla_flops=cost.get("flops", 0.0),
+        xla_bytes_accessed=cost.get("bytes accessed", 0.0),
+        # trip-count-weighted (per-device program; see hlo_analysis.py)
+        hlo_flops=weighted["dot_flops"],
+        hlo_bytes_written=weighted["bytes_written"],
+        collective_bytes=weighted["coll_bytes"],
+        wire_bytes_per_device=weighted["wire_bytes_per_device"],
+        mem=dict(
+            argument_bytes=mem.argument_size_in_bytes,
+            output_bytes=mem.output_size_in_bytes,
+            temp_bytes=mem.temp_size_in_bytes,
+            peak_bytes=getattr(mem, "peak_memory_in_bytes",
+                               mem.argument_size_in_bytes
+                               + mem.temp_size_in_bytes),
+        ),
+        model_params=cfg.param_count(),
+        active_params=cfg.active_param_count(),
+    )
+    if verbose:
+        print(json.dumps(result, indent=2, default=float))
+        print(f"[dryrun] {arch} × {shape_name} × "
+              f"{'multi-pod(2,16,16)' if multi_pod else 'single-pod(16,16)'} "
+              f"COMPILED in {t_compile:.0f}s", file=sys.stderr)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--opt-fp32", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    result = run_cell(args.arch, args.shape, args.multi_pod,
+                      remat=args.remat, seq_shard=not args.no_seq_shard,
+                      opt_bf16=not args.opt_fp32)
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        tag = f"{args.arch}__{args.shape}__{'mp' if args.multi_pod else 'sp'}"
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=2, default=float)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Single pod : (data=16, model=16)          — 256 chips (TPU v5e pod slice)
+Multi pod  : (pod=2, data=16, model=16)   — 512 chips; the ``pod`` axis
+extends data parallelism across pods (gradient all-reduce crosses the DCN
+once per step; everything else stays intra-pod).
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the real host devices (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """Mesh axes carrying (FSDP) data parallelism."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,100 @@
+"""Serving launcher: batched prefill+decode with transactional session
+state (``python -m repro.launch.serve --arch <id>-smoke``).
+
+Every request's quota/accounting updates run as TStream state transactions
+against shared session tables — concurrent request handlers never partition
+or lock the session store (the paper's concurrent-state-access feature in
+the serving plane).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.blotter import AppSpec
+from repro.core.scheduler import DualModeEngine, EngineConfig
+from repro.core.types import CORE_FUNS, make_store
+from repro.models import decode_step, forward, init_cache, init_params
+
+N_SESSIONS = 1024
+
+
+def _session_store(**_):
+    return make_store([N_SESSIONS], 2)  # lanes: [tokens_used, requests]
+
+
+def _access(blt, eb):
+    # debit the session's token quota; reject when exhausted (F_TAKE)
+    blt.read_modify(0, eb["session"],
+                    jnp.stack([eb["n_tokens"], -1.0]), "take")
+
+
+QUOTA_APP = AppSpec(
+    name="serve_quota", funs=CORE_FUNS, max_ops=1, width=2,
+    make_store=_session_store, gen_events=lambda rng, n: {},
+    pre_process=lambda ev: ev, state_access=_access,
+    post_process=lambda eb, res: dict(admitted=res.success[0]),
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-34b-smoke")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    params = init_params(cfg, jax.random.key(0))
+    max_seq = args.prompt_len + args.gen_len
+
+    # transactional session accounting
+    store = _session_store()
+    quota = DualModeEngine(QUOTA_APP, store, EngineConfig())
+    values = store.values.at[:, 0].set(1000.0)  # initial quota
+    rng = np.random.default_rng(0)
+    events = dict(
+        session=jnp.asarray(rng.integers(0, N_SESSIONS, args.batch),
+                            jnp.int32),
+        n_tokens=jnp.full((args.batch,), float(max_seq), jnp.float32),
+    )
+    out, values, _ = quota.step(values, events, 0)
+    print(f"[serve] admitted {int(np.sum(np.asarray(out['admitted'])))}"
+          f"/{args.batch} requests (quota txns)")
+
+    toks = jnp.asarray(rng.integers(0, cfg.vocab,
+                                    (args.batch, args.prompt_len)),
+                       jnp.int32)
+    caches = init_cache(cfg, args.batch, max_seq)
+
+    t0 = time.time()
+    # prefill token-by-token through the decode path (simple, exact)
+    step = jax.jit(lambda p, c, t, i: decode_step(cfg, p, c, t, i))
+    tok = toks[:, :1]
+    for i in range(args.prompt_len):
+        logits, caches = step(params, caches, toks[:, i : i + 1],
+                              jnp.int32(i))
+    generated = []
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    for i in range(args.gen_len):
+        generated.append(np.asarray(tok[:, 0]))
+        logits, caches = step(params, caches, tok,
+                              jnp.int32(args.prompt_len + i))
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    dt = time.time() - t0
+    total = args.batch * (args.prompt_len + args.gen_len)
+    print(f"[serve] {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s on host)")
+    gen = np.stack(generated, 1)
+    assert gen.shape == (args.batch, args.gen_len)
+    print(f"[serve] sample continuation: {gen[0][:8].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

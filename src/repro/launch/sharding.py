@@ -1,0 +1,202 @@
+"""Sharding rules: parameter/activation/cache PartitionSpecs.
+
+Scheme (DESIGN.md §6): TP on the ``model`` axis (attention heads / ffn
+hidden / MoE expert dim), FSDP (ZeRO) on the data axes for the other big
+dim.  Norms and tiny vectors replicate.  Stacked layer axes are always
+unsharded (they are scanned over).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def _rule(path: Tuple[str, ...], ndim: int, dp, ep=None) -> P:
+    """PartitionSpec for one parameter leaf, pre-stack-axis.
+
+    ``ep``: mesh axes for the expert dimension of routed-expert weights
+    (moe_ep.ep_axes) — expert weights live fully sharded by expert, so the
+    shard_map EP region needs no weight collectives at all."""
+    name = path[-1]
+    inside_stack = "stacks" in path
+    # hybrid groups have two stacked axes, plain stacks one
+    lead = 0
+    if inside_stack:
+        lead = 2 if "hybrid_group" in path else 1
+    core = ndim - lead
+
+    def spec(*dims):
+        assert len(dims) == core, (path, ndim, dims)
+        return P(*([None] * lead), *dims)
+
+    # --- embeddings / head -----------------------------------------------
+    if name == "embed":
+        return P("model", dp)
+    if name == "lm_head":
+        return P(dp, "model")
+    # --- norms / scalars / biases-on-heads ---------------------------------
+    if name in ("final_norm", "ln", "ln1", "ln2", "q_norm", "kv_norm",
+                "out_norm", "norm1", "norm2"):
+        return spec(*([None] * core))
+    if name in ("A_log", "D", "dt_bias", "conv_b"):
+        return spec(*([None] * (core - 1)), "model")
+    if name in ("bq", "bk", "bv"):
+        return spec("model", None)
+    # --- attention ---------------------------------------------------------
+    if name in ("wq", "wk", "wv"):            # [D, H, hd]
+        return spec(dp, "model", None)
+    if name == "wo":                           # [H, hd, D]
+        return spec("model", None, dp)
+    if name == "wdq":                          # [D, q_lora]
+        return spec(dp, "model")
+    if name == "wuq":                          # [q_lora, H, dims]
+        return spec(None, "model", None)
+    if name == "wdkv":                         # [D, kv_lora]
+        return spec(dp, None)
+    if name == "wkr":                          # [D, rope]
+        return spec(dp, None)
+    if name in ("wuk", "wuv"):                 # [kv_lora, H, dim]
+        return spec(None, "model", None)
+    # --- ffn / moe ----------------------------------------------------------
+    if name == "router":                       # [D, E]
+        return spec(dp, None)
+    if name in ("wu", "wg"):
+        if core == 3:                          # [E, D, F]
+            # EP active: fully sharded by expert (no gathers in shard_map);
+            # pjit fallback: expert dim on model + FSDP over dp.
+            return spec(ep, None, None) if ep else spec("model", dp, None)
+        return spec(dp, "model")               # [D, F]
+    if name == "wd":
+        if core == 3:                          # [E, F, D]
+            return spec(ep, None, None) if ep else spec("model", None, dp)
+        return spec("model", dp)               # [F, D]
+    if name in ("shared_wu", "shared_wg"):
+        return spec(dp, "model")
+    if name == "shared_wd":
+        return spec("model", dp)
+    # --- mamba ---------------------------------------------------------------
+    if name == "in_proj":                      # [D, C]
+        return spec(dp, "model")
+    if name == "conv_w":                       # [4, C]
+        return spec(None, "model")
+    if name == "out_proj":                     # [di, D]
+        return spec("model", dp)
+    if name == "proj":                         # mtp [2D, D]
+        return spec(dp, "model")
+    # fallback: replicate
+    return spec(*([None] * core))
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def sanitize_spec(spec: P, shape: Tuple[int, ...], mesh) -> P:
+    """Drop mesh axes from dims they don't divide (NamedSharding requires
+    exact divisibility for jit argument shardings)."""
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for size, entry in zip(shape, dims):
+        if entry is not None and size % _axis_size(mesh, entry) != 0:
+            # try shrinking a tuple entry to its largest dividing prefix
+            if isinstance(entry, (tuple, list)):
+                pref = list(entry)
+                while pref and size % _axis_size(mesh, tuple(pref)) != 0:
+                    pref.pop()
+                entry = tuple(pref) if pref else None
+            else:
+                entry = None
+        out.append(entry)
+    return P(*out)
+
+
+def param_specs(params: PyTree, mesh) -> PyTree:
+    from .mesh import dp_axes
+    from repro.models.moe_ep import ep_axes, get_ep_mesh
+    dp = dp_axes(mesh)
+
+    def one(path, leaf):
+        names = tuple(getattr(k, "key", getattr(k, "name", str(k)))
+                      for k in path)
+        ep = None
+        if names[-1] in ("wu", "wg", "wd") and leaf.ndim >= 3 \
+                and get_ep_mesh() is not None:
+            ep = ep_axes(mesh, leaf.shape[-3])
+        return sanitize_spec(_rule(names, leaf.ndim, dp, ep), leaf.shape,
+                             mesh)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params: PyTree, mesh) -> PyTree:
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  param_specs(params, mesh))
+
+
+def batch_specs(batch: PyTree, mesh, global_batch: int) -> PyTree:
+    """Shard the batch axis over the data axes when divisible, else
+    replicate (long_500k decode has batch 1)."""
+    from .mesh import dp_axes
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    lead = dp if global_batch % dp_size == 0 else None
+
+    def one(leaf):
+        return sanitize_spec(P(lead, *([None] * (leaf.ndim - 1))),
+                             leaf.shape, mesh)
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+def cache_specs(caches: PyTree, mesh, global_batch: int) -> PyTree:
+    """KV/SSM cache sharding: batch over data axes, kv heads / latent over
+    model when divisible; stacked layer axes unsharded."""
+    from .mesh import dp_axes
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    bshard = dp if global_batch % dp_size == 0 else None
+    msize = mesh.shape["model"]
+
+    def one(path, leaf):
+        names = tuple(getattr(k, "key", getattr(k, "name", str(k)))
+                      for k in path)
+        lead = 2 if "hybrid_group" in names else 1
+        core = leaf.ndim - lead
+        if names[-1] in ("k", "v"):            # [B, S, hkv, hd]
+            hkv = leaf.shape[-2]
+            hspec = "model" if hkv % msize == 0 else None
+            return P(*([None] * lead), bshard, None, hspec, None)
+        if names[-1] == "ckv":                 # [B, S, r]
+            return P(*([None] * lead), bshard, None, "model"
+                     if leaf.shape[-1] % msize == 0 else None)
+        if names[-1] == "kr":                  # [B, S, rope]
+            return P(*([None] * lead), bshard, None, None)
+        if names[-1] == "conv":                # [B, w, C]
+            return P(*([None] * lead), bshard, None, "model"
+                     if leaf.shape[-1] % msize == 0 else None)
+        if names[-1] == "ssm":                 # [B, H, P, N]
+            h = leaf.shape[lead + 1]
+            return P(*([None] * lead), bshard,
+                     "model" if h % msize == 0 else None, None, None)
+        return P(*([None] * leaf.ndim))
+
+    def sane(path, leaf):
+        return sanitize_spec(one(path, leaf), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(sane, caches)

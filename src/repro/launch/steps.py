@@ -1,0 +1,232 @@
+"""Step builders + abstract input specs for every (arch × shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation); the dry-run lowers/compiles against them.
+``train_step`` / ``prefill_step`` / ``decode_step_fn`` are the jitted
+entry points with explicit in/out shardings and donated buffers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import (ArchConfig, ShapeCfg, decode_step, forward,
+                          init_cache, init_params, loss_fn)
+from repro.optim import AdamWConfig, adamw_init, adamw_update, wsd_schedule
+
+from .mesh import dp_axes
+from .sharding import batch_specs, cache_specs, param_shardings, param_specs
+
+N_PATCHES = 256  # vision stub: patches per sample in vlm cells
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    remat: str = "full"
+    seq_shard_acts: bool = True       # Megatron-style sequence sharding of
+                                      # the layer carry (train/prefill only)
+    expert_parallel: bool = True      # shard_map EP MoE (vs pjit ragged_dot)
+    serving_head_pad: bool = True     # decode: pad/replicate kv heads so
+                                      # the cache shards on the model axis
+    kv_chunk: int = 1024              # flash-attention KV streaming chunk
+    optimizer: AdamWConfig = AdamWConfig(state_dtype=jnp.bfloat16)
+
+
+def _configure_ep(cfg: ArchConfig, mesh, step_cfg: "StepConfig",
+                  tokens_per_device: int = 1 << 30):
+    """EP pays off only when each device has enough tokens to fill its
+    all-to-all capacity buckets; decode (a handful of tokens per device)
+    stays on the pjit path (measured in EXPERIMENTS.md §Perf cell 1)."""
+    from repro.models import layers, moe_ep
+    layers.set_kv_chunk(step_cfg.kv_chunk)
+    if step_cfg.expert_parallel and cfg.is_moe \
+            and cfg.n_experts % mesh.shape["model"] == 0 \
+            and tokens_per_device >= mesh.shape["model"]:
+        moe_ep.set_ep_mesh(mesh, dp_axes(mesh))
+    else:
+        moe_ep.set_ep_mesh(None, dp_axes(mesh))
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeCfg) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    sd = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        return dict(tokens=sd((b, 1), i32))
+    if cfg.frontend == "audio":
+        batch = dict(frames=sd((b, s, cfg.d_model), bf16))
+        if shape.kind == "train":
+            batch["labels"] = sd((b, s), i32)
+        return batch
+    batch = dict(tokens=sd((b, s), i32))
+    if shape.kind == "train":
+        batch["labels"] = sd((b, s), i32)
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = sd((b, N_PATCHES, cfg.d_model), bf16)
+        batch["patch_pos"] = sd((b, N_PATCHES), i32)
+    if cfg.mrope:
+        batch["pos3"] = sd((b, 3, s), i32)
+    return batch
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda k: init_params(cfg, k, dtype),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def abstract_opt_state(cfg: ArchConfig, opt: AdamWConfig):
+    params = abstract_params(cfg)
+    return jax.eval_shape(lambda: adamw_init(params, opt))
+
+
+def abstract_cache(cfg: ArchConfig, shape: ShapeCfg):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def _constrain_maker(mesh, cfg: ArchConfig, step_cfg: StepConfig, seq_len):
+    """Layer-carry sharding constraint: sequence over 'model' (Megatron SP)."""
+    if not step_cfg.seq_shard_acts:
+        return None
+    msize = mesh.shape["model"]
+    if seq_len % msize != 0 or seq_len < msize:
+        return None
+    dp = dp_axes(mesh)
+    spec = P(dp, "model", None)
+
+    def constrain(x):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+def build_train_step(cfg: ArchConfig, shape: ShapeCfg, mesh,
+                     step_cfg: StepConfig = StepConfig()):
+    _configure_ep(cfg, mesh, step_cfg)
+    """Returns (jitted step, (params_struct, opt_struct, batch_struct))."""
+    constrain = _constrain_maker(mesh, cfg, step_cfg, shape.seq_len)
+    opt = step_cfg.optimizer
+
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            return loss_fn(cfg, p, batch, remat=step_cfg.remat,
+                           constrain=constrain)
+
+        loss, grads = jax.value_and_grad(lf)(params)
+        lr = wsd_schedule(opt_state["step"], warmup=2000, stable=50_000,
+                          decay=5_000)
+        new_params, new_state = adamw_update(params, grads, opt_state, opt,
+                                             lr_scale=lr)
+        return new_params, new_state, loss
+
+    params_s = abstract_params(cfg)
+    opt_s = abstract_opt_state(cfg, opt)
+    batch_s = batch_struct(cfg, shape)
+    pspec = param_shardings(params_s, mesh)
+    ospec = dict(
+        m=param_shardings(opt_s["m"], mesh),
+        v=param_shardings(opt_s["v"], mesh),
+        step=NamedSharding(mesh, P()),
+    )
+    bspec = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        batch_specs(batch_s, mesh, shape.global_batch))
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(pspec, ospec, bspec),
+        out_shardings=(pspec, ospec, NamedSharding(mesh, P())),
+        donate_argnums=(0, 1),
+    )
+    return jitted, (params_s, opt_s, batch_s)
+
+
+def build_prefill_step(cfg: ArchConfig, shape: ShapeCfg, mesh,
+                       step_cfg: StepConfig = StepConfig()):
+    _configure_ep(cfg, mesh, step_cfg)
+    constrain = _constrain_maker(mesh, cfg, step_cfg, shape.seq_len)
+
+    def prefill(params, batch):
+        return forward(cfg, params, batch, remat="none", constrain=constrain)
+
+    params_s = abstract_params(cfg)
+    batch_s = batch_struct(cfg, shape)
+    pspec = param_shardings(params_s, mesh)
+    bspec = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        batch_specs(batch_s, mesh, shape.global_batch))
+    out_spec = NamedSharding(
+        mesh, _logits_spec(cfg, shape, mesh))
+    jitted = jax.jit(prefill, in_shardings=(pspec, bspec),
+                     out_shardings=out_spec)
+    return jitted, (params_s, batch_s)
+
+
+def build_decode_step(cfg: ArchConfig, shape: ShapeCfg, mesh,
+                      step_cfg: StepConfig = StepConfig()):
+    """serve_step: one new token against a seq_len-deep KV cache."""
+    _configure_ep(cfg, mesh, step_cfg,
+                  tokens_per_device=max(shape.global_batch
+                                        // _dp_size(mesh), 1))
+    if step_cfg.serving_head_pad:
+        from repro.models.serving import serving_padded
+        cfg = serving_padded(cfg, mesh.shape["model"])
+
+    def serve(params, caches, tokens, pos):
+        return decode_step(cfg, params, caches, tokens, pos)
+
+    params_s = abstract_params(cfg)
+    cache_s = abstract_cache(cfg, shape)
+    batch_s = batch_struct(cfg, shape)
+    pspec = param_shardings(params_s, mesh)
+    cspec = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        cache_specs(cache_s, mesh, shape.global_batch))
+    tspec = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        batch_specs(dict(tokens=batch_s["tokens"]), mesh,
+                    shape.global_batch))["tokens"]
+    lspec = NamedSharding(mesh, _logits_spec(cfg, shape, mesh, decode=True))
+    jitted = jax.jit(
+        serve,
+        in_shardings=(pspec, cspec, tspec, NamedSharding(mesh, P())),
+        out_shardings=(lspec, cspec),
+        donate_argnums=(1,),
+    )
+    pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+    return jitted, (params_s, cache_s, batch_s["tokens"], pos_s)
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _logits_spec(cfg: ArchConfig, shape: ShapeCfg, mesh,
+                 decode: bool = False) -> P:
+    """Logits [B, S, V] sharding, sanitized for odd batch/vocab sizes."""
+    from .sharding import sanitize_spec
+    dp = dp_axes(mesh)
+    s = 1 if decode else shape.seq_len
+    return sanitize_spec(P(dp, None, "model"),
+                         (shape.global_batch, s, cfg.vocab), mesh)
+
+
+def build_step(cfg: ArchConfig, shape: ShapeCfg, mesh,
+               step_cfg: StepConfig = StepConfig()):
+    if shape.kind == "train":
+        fn, specs = build_train_step(cfg, shape, mesh, step_cfg)
+    elif shape.kind == "prefill":
+        fn, specs = build_prefill_step(cfg, shape, mesh, step_cfg)
+    else:
+        fn, specs = build_decode_step(cfg, shape, mesh, step_cfg)
+    return fn, specs

@@ -1,0 +1,67 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Dry-run sweep driver: every (arch × shape × mesh) cell, resumable.
+
+Each cell runs in-process sequentially; results are cached as JSON so the
+sweep can restart.  Run:  PYTHONPATH=src python -m repro.launch.sweep
+"""
+import argparse
+import json
+import sys
+import traceback
+
+from repro.configs import ARCHS
+from repro.models import SHAPES
+
+# cheapest-first so early failures surface fast
+ARCH_ORDER = [
+    "minicpm-2b", "hubert-xlarge", "mamba2-2.7b", "zamba2-2.7b",
+    "moonshot-v1-16b-a3b", "nemotron-4-15b", "granite-34b",
+    "qwen2-vl-72b", "qwen1.5-110b", "deepseek-v3-671b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--only-multi-pod", action="store_true")
+    ap.add_argument("--only-single-pod", action="store_true")
+    ap.add_argument("--archs", default="")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    from repro.launch.dryrun import run_cell
+
+    archs = args.archs.split(",") if args.archs else ARCH_ORDER
+    meshes = [False, True]
+    if args.only_multi_pod:
+        meshes = [True]
+    if args.only_single_pod:
+        meshes = [False]
+
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in SHAPE_ORDER:
+                tag = f"{arch}__{shape}__{'mp' if multi_pod else 'sp'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[sweep] skip cached {tag}", file=sys.stderr)
+                    continue
+                print(f"[sweep] running {tag}", file=sys.stderr, flush=True)
+                try:
+                    res = run_cell(arch, shape, multi_pod, verbose=False)
+                except Exception as e:  # record failures, keep sweeping
+                    res = dict(arch=arch, shape=shape, multi_pod=multi_pod,
+                               error=f"{type(e).__name__}: {e}",
+                               traceback=traceback.format_exc()[-2000:])
+                    print(f"[sweep] FAILED {tag}: {e}", file=sys.stderr,
+                          flush=True)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=2, default=float)
+    print("[sweep] done", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

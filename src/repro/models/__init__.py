@@ -1,0 +1,5 @@
+"""Model zoo: dense/MoE/MLA transformers, Mamba2 SSD, hybrid, encoder."""
+from .config import (SHAPE_BY_NAME, SHAPES, ArchConfig, ShapeCfg,
+                     cell_is_applicable)
+from .model import (decode_step, forward, init_cache, init_params, layer_plan,
+                    loss_fn)

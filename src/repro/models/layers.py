@@ -1,0 +1,299 @@
+"""Transformer building blocks: norms, RoPE/M-RoPE, flash-style attention
+(GQA + MLA), FFN variants, dropless MoE.
+
+Design constraints (see DESIGN.md §6):
+  * every model body is a ``lax.scan`` over stacked layer params — O(1) HLO
+  * attention streams over KV chunks with online softmax so the 32k/500k
+    shape cells never materialize an S×S score matrix
+  * MoE uses sort + ``lax.ragged_dot`` (dropless, TPU-native)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+
+Array = jnp.ndarray
+
+# flash-attention KV streaming chunk (perf lever: larger chunks rewrite the
+# f32 online-softmax accumulators fewer times; VMEM/temp grows with chunk)
+DEFAULT_KV_CHUNK = 1024
+
+
+def set_kv_chunk(n: int) -> None:
+    global DEFAULT_KV_CHUNK
+    DEFAULT_KV_CHUNK = int(n)
+
+
+# ---------------------------------------------------------------------------
+# norms & misc
+# ---------------------------------------------------------------------------
+def rms_norm(x: Array, w: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "gelu":
+        return jax.nn.gelu
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ sectioned M-RoPE for Qwen2-VL)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, pos: Array, theta: float) -> Array:
+    """x: [..., S, H, D]; pos: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)
+    ang = pos[..., None].astype(jnp.float32) * inv          # [..., S, D/2]
+    ang = ang[..., None, :]                                  # head axis
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, pos3: Array, theta: float,
+                sections=(16, 24, 24)) -> Array:
+    """Qwen2-VL M-RoPE: rotary pairs split into (t, h, w) sections.
+
+    x: [B, S, H, D]; pos3: [B, 3, S] position ids per section.
+    """
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                               # [D/2]
+    sec = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                           for i, s in enumerate(sections)])[: d // 2]
+    # pick, per rotary pair, the section's position id
+    pos = jnp.take_along_axis(
+        pos3.astype(jnp.float32),                            # [B, 3, S]
+        jnp.broadcast_to(sec[None, :, None],
+                         (x.shape[0], d // 2, x.shape[1])).astype(jnp.int32),
+        axis=1)                                              # [B, D/2, S]
+    ang = pos.transpose(0, 2, 1)[..., None, :] * inv[None, None, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash-style attention (no S×S materialization)
+# ---------------------------------------------------------------------------
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                    q_offset: int | Array = 0, kv_len: Optional[Array] = None,
+                    kv_chunk: Optional[int] = None) -> Array:
+    """Online-softmax attention streaming over KV chunks.
+
+    q: [B, Sq, H, D]; k/v: [B, Sk, Hkv, D] (GQA: H % Hkv == 0).
+    ``q_offset``: absolute position of q[0] (decode / chunked prefill).
+    ``kv_len``: effective kv length (decode with preallocated cache).
+    """
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    rep = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    kv_chunk = DEFAULT_KV_CHUNK if kv_chunk is None else kv_chunk
+    nchunks = max(1, -(-sk // kv_chunk))
+    ck = min(kv_chunk, sk)
+    pad = nchunks * ck - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = jnp.moveaxis(k.reshape(b, nchunks, ck, hkv, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nchunks, ck, hkv, dv), 1, 0)
+
+    # GQA grouping: q [B, Sq, G, R, D] so shared KV heads are never repeated
+    qg = (q * scale).astype(jnp.float32).reshape(b, sq, hkv, rep, d)
+    qpos = jnp.asarray(q_offset) + jnp.arange(sq)
+
+    def step(carry, inputs):
+        m, l, acc = carry                          # [B,G,R,Sq], ..,[...,dv]
+        kj, vj, j = inputs
+        kpos = j * ck + jnp.arange(ck)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, kj.astype(jnp.float32))
+        mask = jnp.ones((sq, ck), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if kv_len is not None:
+            mask &= kpos[None, :] < kv_len
+        mask &= (kpos < sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bgrqk,bkgd->bgrqd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, rep, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, rep, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, rep, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kc, vc, jnp.arange(nchunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)       # [B,G,R,Sq,dv]
+    out = out.reshape(b, h, sq, dv).transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)                         # [B, Sq, H, dv]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (optionally with KV cache)
+# ---------------------------------------------------------------------------
+def attn_forward(cfg: ArchConfig, p: dict, x: Array, pos: Array,
+                 cache: Optional[dict] = None,
+                 cache_pos: Optional[Array] = None,
+                 pos3: Optional[Array] = None) -> Tuple[Array, Optional[dict]]:
+    """x: [B, S, D].  With ``cache``, writes new kv at ``cache_pos`` and
+    attends over the cache (decode / incremental prefill)."""
+    b, s, d = x.shape
+    hd, h, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.mrope and pos3 is not None:
+        q = apply_mrope(q, pos3, cfg.rope_theta)
+        k = apply_mrope(k, pos3, cfg.rope_theta)
+    elif not cfg.encoder_only:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
+            cache["k"].dtype), cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
+            cache["v"].dtype), cache_pos, axis=1)
+        o = flash_attention(q, ck, cv, causal=True, q_offset=cache_pos,
+                            kv_len=cache_pos + s)
+        cache = dict(k=ck, v=cv)
+    else:
+        o = flash_attention(q, k, v, causal=not cfg.encoder_only)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V3): low-rank q/kv with compressed KV cache
+# ---------------------------------------------------------------------------
+def mla_forward(cfg: ArchConfig, p: dict, x: Array, pos: Array,
+                cache: Optional[dict] = None,
+                cache_pos: Optional[Array] = None) -> Tuple[Array, Optional[dict]]:
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    # --- queries through the q-LoRA path
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wdq"]), p["q_norm"],
+                  cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wuq"])           # [B,S,H,dn+dr]
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    # --- compressed kv latent + shared rope key
+    ckv = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wdkv"]), p["kv_norm"],
+                   cfg.norm_eps)                             # [B,S,r]
+    k_rope = apply_rope(jnp.einsum("bsd,dk->bsk", x, p["wkr"])[:, :, None, :],
+                        pos, cfg.rope_theta)[:, :, 0]        # [B,S,dr]
+
+    if cache is not None:
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), cache_pos, axis=1)
+        kr_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], k_rope.astype(cache["kr"].dtype), cache_pos, axis=1)
+        # absorbed decode: score = q_nope·W_uk^T·ckv + q_rope·k_rope,
+        # attention output stays in latent space, expanded once via W_uv.
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wuk"])
+        q_eff = jnp.concatenate([q_lat, q_rope], -1)         # [B,S,H,r+dr]
+        k_eff = jnp.concatenate(
+            [ckv_c[:, :, None, :], kr_c[:, :, None, :]], -1)  # [B,S,1,r+dr]
+        o_lat = flash_attention(q_eff, k_eff, ckv_c[:, :, None, :],
+                                causal=True, q_offset=cache_pos,
+                                kv_len=cache_pos + s)         # [B,S,H,r]
+        o = jnp.einsum("bshr,rhk->bshk", o_lat, p["wuv"])     # [B,S,H,dv]
+        cache = dict(ckv=ckv_c, kr=kr_c)
+    else:
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["wuk"])
+        v = jnp.einsum("bsr,rhk->bshk", ckv, p["wuv"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, s, h, dr))], -1)
+        q_full = jnp.concatenate([q_nope, q_rope], -1)
+        o = flash_attention(q_full, k, v, causal=True)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# FFN + MoE
+# ---------------------------------------------------------------------------
+def ffn_forward(cfg: ArchConfig, p: dict, x: Array) -> Array:
+    f = act_fn(cfg.act)
+    if cfg.gated_ffn:
+        return jnp.einsum(
+            "bsf,fd->bsd",
+            f(jnp.einsum("bsd,df->bsf", x, p["wg"]))
+            * jnp.einsum("bsd,df->bsf", x, p["wu"]), p["wd"])
+    return jnp.einsum("bsf,fd->bsd",
+                      f(jnp.einsum("bsd,df->bsf", x, p["wu"])), p["wd"])
+
+
+def moe_forward(cfg: ArchConfig, p: dict, x: Array) -> Array:
+    """Dropless MoE: router top-k -> sort tokens by expert -> ragged_dot.
+
+    x: [B, S, D].  Expert weights: [E, D, F] / [E, F, D] (+gate for swiglu).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    xt = x.reshape(b * s, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    gates, choice = jax.lax.top_k(jax.nn.sigmoid(logits), k)   # DSv3-style
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    t = b * s * k
+    flat_exp = choice.reshape(t)
+    flat_tok = jnp.repeat(jnp.arange(b * s), k)
+    order = jnp.argsort(flat_exp)
+    sort_exp = flat_exp[order]
+    sort_tok = flat_tok[order]
+    xs = xt[sort_tok]                                           # [T, D]
+    group_sizes = jnp.bincount(sort_exp, length=e).astype(jnp.int32)
+
+    f = act_fn(cfg.act)
+    if cfg.gated_ffn:
+        hg = jax.lax.ragged_dot(xs, p["wg"], group_sizes)
+        hu = jax.lax.ragged_dot(xs, p["wu"], group_sizes)
+        hidden = f(hg) * hu
+    else:
+        hidden = f(jax.lax.ragged_dot(xs, p["wu"], group_sizes))
+    ys = jax.lax.ragged_dot(hidden, p["wd"], group_sizes)       # [T, D]
+
+    gate_flat = gates.reshape(t)[order]
+    out = jnp.zeros((b * s, d), ys.dtype).at[sort_tok].add(
+        ys * gate_flat[:, None].astype(ys.dtype))
+
+    if cfg.n_shared_experts:
+        sh = dict(wg=p["shared_wg"], wu=p["shared_wu"], wd=p["shared_wd"]) \
+            if cfg.gated_ffn else dict(wu=p["shared_wu"], wd=p["shared_wd"])
+        out = out + ffn_forward(cfg, sh, x).reshape(b * s, d)
+    return out.reshape(b, s, d).astype(x.dtype)

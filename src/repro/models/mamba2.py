@@ -1,0 +1,171 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Chunked SSD algorithm: the sequence is split into chunks of length Q;
+intra-chunk interactions use the quadratic (attention-like) form on the MXU,
+inter-chunk state is carried by a linear scan — exactly the paper's
+decomposition.  Decode runs the O(1)-per-token recurrence with a
+(conv window, SSM state) cache.
+
+Shapes: d_inner = expand * d_model, H = d_inner / head_dim heads,
+state N = ssm_state, single B/C group (n_groups = 1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import rms_norm
+
+Array = jnp.ndarray
+CONV_W = 4
+
+
+def _dw_conv(x: Array, w: Array, state: Optional[Array] = None):
+    """Causal depthwise conv, window CONV_W.  x: [B, S, C], w: [CONV_W, C].
+
+    With ``state`` [B, CONV_W-1, C] (decode), returns (y, new_state).
+    """
+    if state is not None:
+        xin = jnp.concatenate([state, x], axis=1)
+        new_state = xin[:, -(CONV_W - 1):]
+    else:
+        xin = jnp.pad(x, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+        new_state = xin[:, -(CONV_W - 1):]
+    y = sum(xin[:, i : i + x.shape[1]] * w[i] for i in range(CONV_W))
+    return y, new_state
+
+
+def ssd_chunked(xh: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
+                chunk: int) -> Array:
+    """Chunked SSD scan.
+
+    xh: [B, S, H, P]; dt: [B, S, H] (post-softplus); A: [H] (negative);
+    Bm/Cm: [B, S, N] (single group, broadcast over heads).
+    Returns y: [B, S, H, P].
+    """
+    b, s, h, p = xh.shape
+    n = Bm.shape[-1]
+    nc = s // chunk
+    assert nc * chunk == s, (s, chunk)
+    xq = xh.reshape(b, nc, chunk, h, p)
+    dtq = dt.reshape(b, nc, chunk, h)
+    Bq = Bm.reshape(b, nc, chunk, n)
+    Cq = Cm.reshape(b, nc, chunk, n)
+
+    dA = dtq * A[None, None, None, :]               # [B,C,Q,H] (negative)
+    cum = jnp.cumsum(dA, axis=2)                    # within-chunk cumsum
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cq.astype(jnp.float32),
+                        Bq.astype(jnp.float32))            # [B,C,Q,Q]
+    xdt = xq.astype(jnp.float32) * dtq[..., None]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def head_intra(inputs):
+        # per-head [B,C,Q,Q] decay matrix — never materialize the H axis
+        cum_h, xdt_h = inputs                       # [B,C,Q], [B,C,Q,P]
+        seg = cum_h[:, :, :, None] - cum_h[:, :, None, :]
+        L = jnp.where(mask[None, None], jnp.exp(seg), 0.0)
+        return jnp.einsum("bcqk,bckp->bcqp", scores * L, xdt_h)
+
+    y_intra = jax.lax.map(
+        head_intra,
+        (jnp.moveaxis(cum, -1, 0), jnp.moveaxis(xdt, -2, 0)))
+    y_intra = jnp.moveaxis(y_intra, 0, -2)                 # [B,C,Q,H,P]
+
+    # chunk-final states: S_c = sum_k exp(cum_end - cum_k) * B_k x_k dt_k
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)           # [B,C,Q,H]
+    states = jnp.einsum("bckn,bckh,bckhp->bcnhp", Bq.astype(jnp.float32),
+                        decay_end, xdt)                    # [B,C,N,H,P]
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # [B,C,H]
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                      # [B,N,H,P], [B,H]
+        new = carry * dec[:, None, :, None] + st
+        return new, carry                                  # emit state *before*
+
+    init = jnp.zeros((b, n, h, p), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        scan_fn, init, (jnp.moveaxis(states, 1, 0),
+                        jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # [B,C,N,H,P]
+
+    # contribution of carried state to each position
+    decay_in = jnp.exp(cum)                                # [B,C,Q,H]
+    y_inter = jnp.einsum("bcqn,bcqh,bcnhp->bcqhp",
+                         Cq.astype(jnp.float32), decay_in, prev_states)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(xh.dtype)
+
+
+def mamba_forward(cfg: ArchConfig, p: dict, x: Array,
+                  cache: Optional[dict] = None) -> Tuple[Array, Optional[dict]]:
+    """One Mamba2 block.  x: [B, S, D].  Decode when ``cache`` is given
+    (S == 1): conv window + SSM state recurrence."""
+    b, s, d = x.shape
+    di, n, hdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    h = cfg.ssm_heads
+    proj = jnp.einsum("bsd,dc->bsc", x, p["in_proj"])
+    z, xc, Bm, Cm, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xc, Bm, Cm], -1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _dw_conv(conv_in, p["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out + p["conv_b"])
+    xc, Bm, Cm = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # [H]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    xh = xc.reshape(b, s, h, hdim)
+
+    if cache is None:
+        pad = (-s) % cfg.ssm_chunk
+        if pad:
+            xh2 = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt2 = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            B2 = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            C2 = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xh2, dt2, B2, C2 = xh, dt, Bm, Cm
+        y = ssd_chunked(xh2, dt2, A, B2, C2, cfg.ssm_chunk)[:, :s]
+        new_ssm = None
+    else:
+        # O(1) recurrence: state [B,H,P,N]
+        st = cache["ssm"].astype(jnp.float32)
+        dA = jnp.exp(dt[:, 0, :, None, None] * A[None, :, None, None])
+        upd = jnp.einsum("bhp,bn,bh->bhpn", xh[:, 0].astype(jnp.float32),
+                         Bm[:, 0].astype(jnp.float32), dt[:, 0])
+        st = st * dA + upd
+        y = jnp.einsum("bhpn,bn->bhp", st, Cm[:, 0].astype(jnp.float32))
+        y = y[:, None]                                       # [B,1,H,P]
+        new_ssm = st
+        y = y.astype(xh.dtype)
+
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(b, s, di) * jax.nn.silu(z)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsc,cd->bsd", y, p["out_proj"])
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(conv=new_conv.astype(cache["conv"].dtype),
+                         ssm=new_ssm.astype(cache["ssm"].dtype))
+    return out, new_cache
+
+
+def mamba_param_shapes(cfg: ArchConfig):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * n
+    return dict(
+        in_proj=(d, 2 * di + 2 * n + h),
+        conv_w=(CONV_W, conv_ch),
+        conv_b=(conv_ch,),
+        A_log=(h,),
+        D=(h,),
+        dt_bias=(h,),
+        out_norm=(di,),
+        out_proj=(di, d),
+    )

@@ -1,0 +1,413 @@
+"""Model assembly: init / forward / decode for all assigned families.
+
+Every stack is a ``lax.scan`` over layer-stacked params (O(1) HLO size), with
+a configurable remat policy per layer.  Heterogeneous stacks (MoE models with
+leading dense layers; Zamba2's shared-attention hybrid) are a short Python
+sequence of scans.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import (attn_forward, ffn_forward, mla_forward, moe_forward,
+                     rms_norm)
+from .mamba2 import CONV_W, mamba_forward, mamba_param_shapes
+
+Array = jnp.ndarray
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _attn_params(cfg: ArchConfig, key, dtype):
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 8)
+    if cfg.mla:
+        dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        return dict(
+            wdq=_dense_init(ks[0], (d, cfg.q_lora_rank), dtype),
+            q_norm=jnp.ones((cfg.q_lora_rank,), dtype),
+            wuq=_dense_init(ks[1], (cfg.q_lora_rank, h, dn + dr), dtype),
+            wdkv=_dense_init(ks[2], (d, cfg.kv_lora_rank), dtype),
+            kv_norm=jnp.ones((cfg.kv_lora_rank,), dtype),
+            wkr=_dense_init(ks[3], (d, dr), dtype),
+            wuk=_dense_init(ks[4], (cfg.kv_lora_rank, h, dn), dtype),
+            wuv=_dense_init(ks[5], (cfg.kv_lora_rank, h, dv), dtype),
+            wo=_dense_init(ks[6], (h, dv, d), dtype),
+        )
+    p = dict(
+        wq=_dense_init(ks[0], (d, h, hd), dtype),
+        wk=_dense_init(ks[1], (d, hkv, hd), dtype),
+        wv=_dense_init(ks[2], (d, hkv, hd), dtype),
+        wo=_dense_init(ks[3], (h, hd, d), dtype),
+    )
+    if cfg.qkv_bias:
+        p.update(bq=jnp.zeros((h, hd), dtype), bk=jnp.zeros((hkv, hd), dtype),
+                 bv=jnp.zeros((hkv, hd), dtype))
+    return p
+
+
+def _ffn_params(cfg: ArchConfig, key, d_ff, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    p = dict(wu=_dense_init(ks[0], (d, d_ff), dtype),
+             wd=_dense_init(ks[1], (d_ff, d), dtype))
+    if cfg.gated_ffn:
+        p["wg"] = _dense_init(ks[2], (d, d_ff), dtype)
+    return p
+
+
+def _moe_params(cfg: ArchConfig, key, dtype):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 7)
+    p = dict(
+        router=_dense_init(ks[0], (d, e), jnp.float32),
+        wu=_dense_init(ks[1], (e, d, f), dtype),
+        wd=_dense_init(ks[2], (e, f, d), dtype),
+    )
+    if cfg.gated_ffn:
+        p["wg"] = _dense_init(ks[3], (e, d, f), dtype)
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        p.update(shared_wu=_dense_init(ks[4], (d, fs), dtype),
+                 shared_wd=_dense_init(ks[5], (fs, d), dtype))
+        if cfg.gated_ffn:
+            p["shared_wg"] = _dense_init(ks[6], (d, fs), dtype)
+    return p
+
+
+def _block_params(cfg: ArchConfig, key, kind: str, dtype):
+    """One transformer block: kind in {dense, moe, ssm, shared_attn}."""
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "ssm":
+        shapes = mamba_param_shapes(cfg)
+        ks = jax.random.split(k1, len(shapes))
+        mp = {}
+        for kk, (name, shp) in zip(ks, sorted(shapes.items())):
+            if name in ("conv_b", "dt_bias"):
+                mp[name] = jnp.zeros(shp, dtype)
+            elif name == "A_log":
+                mp[name] = jnp.zeros(shp, jnp.float32)
+            elif name == "D":
+                mp[name] = jnp.ones(shp, dtype)
+            elif name == "out_norm":
+                mp[name] = jnp.ones(shp, dtype)
+            else:
+                mp[name] = _dense_init(kk, shp, dtype)
+        return dict(ln=jnp.ones((d,), dtype), mamba=mp)
+    if kind == "dense":
+        ffn = _ffn_params(cfg, k2, cfg.d_ff, dtype)
+    elif kind == "moe":
+        ffn = _moe_params(cfg, k2, dtype)
+    elif kind == "shared_attn":
+        ffn = _ffn_params(cfg, k2, cfg.shared_attn_d_ff, dtype)
+    else:
+        raise ValueError(kind)
+    return dict(ln1=jnp.ones((d,), dtype),
+                attn=_attn_params(cfg, k1, dtype),
+                ln2=jnp.ones((d,), dtype),
+                ffn=ffn)
+
+
+def layer_plan(cfg: ArchConfig):
+    """The sequence of (kind, count) scans composing the model body."""
+    if cfg.family == "ssm":
+        return [("ssm", cfg.n_layers)]
+    if cfg.family == "hybrid":
+        g = cfg.attn_every
+        return [("hybrid_group", cfg.n_layers // g)]
+    if cfg.is_moe:
+        nd = cfg.first_dense_layers
+        return [("dense", nd), ("moe", cfg.n_layers - nd)]
+    return [("dense", cfg.n_layers)]
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> PyTree:
+    keys = jax.random.split(key, 8)
+    params: Dict[str, PyTree] = {}
+    if cfg.frontend != "audio":
+        params["embed"] = _dense_init(keys[0], (cfg.vocab, cfg.d_model),
+                                      dtype, scale=0.02)
+    params["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    params["lm_head"] = _dense_init(keys[1], (cfg.d_model, cfg.vocab), dtype)
+
+    stacks = {}
+    for i, (kind, count) in enumerate(layer_plan(cfg)):
+        if count == 0:
+            continue
+        ks = jax.random.split(jax.random.fold_in(keys[2], i), count)
+        if kind == "hybrid_group":
+            per = cfg.attn_every
+            def one_group(k):
+                kin = jax.random.split(k, per)
+                return jax.vmap(lambda kk: _block_params(cfg, kk, "ssm",
+                                                         dtype))(kin)
+            stacks[kind] = jax.vmap(one_group)(ks)
+        else:
+            stacks[kind] = jax.vmap(
+                lambda kk: _block_params(cfg, kk, kind, dtype))(ks)
+    params["stacks"] = stacks
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _block_params(cfg, keys[3], "shared_attn",
+                                              dtype)
+    if cfg.mtp:
+        params["mtp"] = dict(
+            proj=_dense_init(keys[4], (2 * cfg.d_model, cfg.d_model), dtype),
+            norm1=jnp.ones((cfg.d_model,), dtype),
+            norm2=jnp.ones((cfg.d_model,), dtype),
+            block=_block_params(cfg, keys[5],
+                                "moe" if cfg.is_moe else "dense", dtype),
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+REMAT_POLICIES = {
+    "none": None,
+    "dots": "dots",
+    "full": "full",
+}
+
+
+def _maybe_remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # full recompute
+
+
+def _block_forward(cfg: ArchConfig, p, x, pos, kind, cache=None,
+                   cache_pos=None, pos3=None):
+    if kind == "ssm":
+        h, new_cache = mamba_forward(cfg, p["mamba"],
+                                     rms_norm(x, p["ln"], cfg.norm_eps),
+                                     cache)
+        return x + cfg.residual_scale * h, new_cache
+    attn_fn = mla_forward if cfg.mla else attn_forward
+    kw = dict(cache=cache, cache_pos=cache_pos)
+    if not cfg.mla:
+        kw["pos3"] = pos3
+    a, new_cache = attn_fn(cfg, p["attn"],
+                           rms_norm(x, p["ln1"], cfg.norm_eps), pos, **kw)
+    x = x + cfg.residual_scale * a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        from .moe_ep import get_ep_mesh, moe_forward_ep
+        if get_ep_mesh() is not None:
+            f = moe_forward_ep(cfg, p["ffn"], h)   # expert-parallel path
+        else:
+            f = moe_forward(cfg, p["ffn"], h)      # single-host fallback
+    else:
+        f = ffn_forward(cfg, p["ffn"], h)
+    return x + cfg.residual_scale * f, new_cache
+
+
+def _run_stacks(cfg: ArchConfig, params, x, pos, *, caches=None,
+                cache_pos=None, pos3=None, remat="full", constrain=None):
+    """Scan the layer stacks; returns (x, new_caches).
+
+    ``constrain``: optional sharding constraint applied to the layer carry
+    (Megatron-style sequence sharding between blocks)."""
+    new_caches = {} if caches is not None else None
+    cst = constrain if constrain is not None else (lambda t: t)
+    for kind, count in layer_plan(cfg):
+        if count == 0:
+            continue
+        stack = params["stacks"][kind]
+
+        if kind == "hybrid_group":
+            def group_body(carry, xs):
+                h = carry
+                gp, gc = xs
+
+                def inner(carry2, xs2):
+                    lp, lc = xs2
+                    out, nc = _block_forward(cfg, lp, carry2, pos, "ssm",
+                                             cache=lc, cache_pos=cache_pos)
+                    return out, nc
+
+                h, ncs = jax.lax.scan(
+                    inner, h, (gp, gc["ssm"] if gc is not None else None))
+                # shared attention block (same weights every group)
+                h, nat = _block_forward(
+                    cfg, params["shared_attn"], h, pos, "dense",
+                    cache=gc["attn"] if gc is not None else None,
+                    cache_pos=cache_pos, pos3=pos3)
+                nc_out = dict(ssm=ncs, attn=nat) if gc is not None else None
+                return cst(h), nc_out
+
+            body = _maybe_remat(group_body, remat)
+            gc_in = caches[kind] if caches is not None else None
+            x, ncs = jax.lax.scan(body, x, (stack, gc_in))
+            if caches is not None:
+                new_caches[kind] = ncs
+        else:
+            def layer_body(carry, xs):
+                lp, lc = xs
+                out, nc = _block_forward(cfg, lp, carry, pos, kind,
+                                         cache=lc, cache_pos=cache_pos,
+                                         pos3=pos3)
+                return cst(out), nc
+
+            body = _maybe_remat(layer_body, remat)
+            lc_in = caches[kind] if caches is not None else None
+            x, ncs = jax.lax.scan(body, x, (stack, lc_in))
+            if caches is not None:
+                new_caches[kind] = ncs
+    return x, new_caches
+
+
+def embed_inputs(cfg: ArchConfig, params, batch) -> Tuple[Array, Array,
+                                                          Optional[Array]]:
+    """Returns (hidden, pos, pos3)."""
+    if cfg.frontend == "audio":
+        x = batch["frames"]
+        b, s = x.shape[:2]
+        pos = jnp.arange(s)[None, :]
+        return x, pos, None
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        # scatter precomputed patch embeddings over placeholder positions
+        pe, pp = batch["patch_embeds"], batch["patch_pos"]
+
+        def put(row_x, row_e, row_p):
+            return row_x.at[row_p].set(row_e.astype(row_x.dtype))
+
+        x = jax.vmap(put)(x, pe, pp)
+    pos = jnp.arange(s)[None, :]
+    pos3 = batch.get("pos3") if cfg.mrope else None
+    return x, pos, pos3
+
+
+def forward(cfg: ArchConfig, params, batch, *, remat="full",
+            constrain=None) -> Array:
+    """Train/prefill forward -> logits [B, S, V]."""
+    x, pos, pos3 = embed_inputs(cfg, params, batch)
+    x, _ = _run_stacks(cfg, params, x, pos, pos3=pos3, remat=remat,
+                       constrain=constrain)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, remat="full",
+            constrain=None) -> Array:
+    """Next-token CE (causal LMs) or masked-prediction CE (encoder)."""
+    x, pos, pos3 = embed_inputs(cfg, params, batch)
+    h, _ = _run_stacks(cfg, params, x, pos, pos3=pos3, remat=remat,
+                       constrain=constrain)
+    hn = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", hn, params["lm_head"])
+    labels = batch["labels"]
+    mask = (labels >= 0)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32),
+        jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    ce = jnp.sum((lse - gold) * mask) / jnp.maximum(mask.sum(), 1)
+
+    if cfg.mtp:
+        # DeepSeek-V3 MTP depth 1: predict t+2 through one extra block.
+        emb_next = jnp.take(params["embed"], batch["tokens"], axis=0)
+        emb_next = jnp.roll(emb_next, -1, axis=1)
+        mp = params["mtp"]
+        hcat = jnp.concatenate(
+            [rms_norm(h, mp["norm1"], cfg.norm_eps),
+             rms_norm(emb_next, mp["norm2"], cfg.norm_eps)], axis=-1)
+        hm = jnp.einsum("bsd,dk->bsk", hcat, mp["proj"])
+        hm, _ = _block_forward(cfg, mp["block"], hm, pos,
+                               "moe" if cfg.is_moe else "dense")
+        lm = jnp.einsum("bsd,dv->bsv",
+                        rms_norm(hm, params["final_norm"], cfg.norm_eps),
+                        params["lm_head"])
+        lbl2 = jnp.roll(labels, -1, axis=1)
+        mask2 = (mask & jnp.roll(mask, -1, axis=1)).at[:, -1].set(False)
+        lse2 = jax.nn.logsumexp(lm.astype(jnp.float32), axis=-1)
+        gold2 = jnp.take_along_axis(
+            lm.astype(jnp.float32),
+            jnp.maximum(lbl2, 0)[..., None], axis=-1)[..., 0]
+        ce = ce + 0.1 * jnp.sum((lse2 - gold2) * mask2) \
+            / jnp.maximum(mask2.sum(), 1)
+    return ce
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> PyTree:
+    """Layer-stacked cache pytree matching layer_plan."""
+    caches = {}
+    for kind, count in layer_plan(cfg):
+        if count == 0:
+            continue
+        if kind == "hybrid_group":
+            per = cfg.attn_every
+            ssm = dict(
+                conv=jnp.zeros((count, per, batch, CONV_W - 1,
+                                cfg.d_inner + 2 * cfg.ssm_state), dtype),
+                ssm=jnp.zeros((count, per, batch, cfg.ssm_heads,
+                               cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+            )
+            attn = dict(
+                k=jnp.zeros((count, batch, max_seq, cfg.n_kv_heads, cfg.hd),
+                            dtype),
+                v=jnp.zeros((count, batch, max_seq, cfg.n_kv_heads, cfg.hd),
+                            dtype),
+            )
+            caches[kind] = dict(ssm=ssm, attn=attn)
+        elif kind == "ssm":
+            caches[kind] = dict(
+                conv=jnp.zeros((count, batch, CONV_W - 1,
+                                cfg.d_inner + 2 * cfg.ssm_state), dtype),
+                ssm=jnp.zeros((count, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                               cfg.ssm_state), jnp.float32),
+            )
+        elif cfg.mla:
+            caches[kind] = dict(
+                ckv=jnp.zeros((count, batch, max_seq, cfg.kv_lora_rank),
+                              dtype),
+                kr=jnp.zeros((count, batch, max_seq, cfg.qk_rope_dim), dtype),
+            )
+        else:
+            caches[kind] = dict(
+                k=jnp.zeros((count, batch, max_seq, cfg.n_kv_heads, cfg.hd),
+                            dtype),
+                v=jnp.zeros((count, batch, max_seq, cfg.n_kv_heads, cfg.hd),
+                            dtype),
+            )
+    return caches
+
+
+def decode_step(cfg: ArchConfig, params, caches, tokens: Array,
+                pos: Array) -> Tuple[Array, PyTree]:
+    """One token step.  tokens: [B, 1]; pos: scalar int32 (cache fill)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    posv = pos + jnp.zeros((1, 1), jnp.int32)
+    pos3 = jnp.broadcast_to(posv[:, None, :], (x.shape[0], 3, 1)) \
+        if cfg.mrope else None
+    x, new_caches = _run_stacks(cfg, params, x, posv, caches=caches,
+                                cache_pos=pos, pos3=pos3, remat="none")
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits, new_caches

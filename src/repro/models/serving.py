@@ -1,0 +1,97 @@
+"""Serving-plan head padding: make KV caches shardable on the model axis.
+
+Decode cells whose kv-head count doesn't divide the TP axis (minicpm's 36
+MHA heads; GQA kv=8 on a 16-way axis) replicate the whole cache per device
+— the measured 322 GB/device on minicpm decode_32k (§Perf).  Two
+mathematically inert weight transforms fix this at serving time:
+
+  * MHA: pad q+kv heads to the next multiple of the axis.  Padded heads
+    have zero W_q/W_k/W_v rows and zero W_o rows -> contribute nothing.
+  * GQA (hkv < axis): replicate kv heads up to the axis size and regroup.
+    Replicated kv heads are identical -> attention per q head unchanged.
+
+Per-device cache drops by (new local kv heads / old replicated kv heads);
+e.g. qwen decode 8 replicated -> 1 local (8x), minicpm 36 -> 3 (12x).
+MQA (kv=1) gains nothing (1 head replicated either way) — documented.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+
+
+def serving_padded(cfg: ArchConfig, msize: int) -> ArchConfig:
+    """Config transform for decode on an msize-way TP axis."""
+    if not cfg.n_heads or cfg.mla or cfg.encoder_only:
+        return cfg
+    hkv, nh = cfg.n_kv_heads, cfg.n_heads
+    if hkv % msize == 0:
+        return cfg
+    if hkv == nh:                       # MHA: pad q and kv together
+        nh2 = -(-nh // msize) * msize
+        return dataclasses.replace(cfg, n_heads=nh2, n_kv_heads=nh2,
+                                   head_dim=cfg.hd)
+    if hkv < msize and nh % msize == 0 and (nh // hkv) % (nh // msize) == 0:
+        return dataclasses.replace(cfg, n_kv_heads=msize, head_dim=cfg.hd)
+    return cfg
+
+
+def pad_attn_params(cfg: ArchConfig, padded: ArchConfig, p: dict) -> dict:
+    """Transform one attention block's weights (training layout -> serving
+    layout).  Zero-pad q/o heads; replicate kv heads with regrouping."""
+    if padded is cfg:
+        return p
+    hd = cfg.hd
+    nh0, nh1 = cfg.n_heads, padded.n_heads
+    kv0, kv1 = cfg.n_kv_heads, padded.n_kv_heads
+    out = dict(p)
+
+    def pad_h(w, axis, target):
+        padw = [(0, 0)] * w.ndim
+        padw[axis] = (0, target - w.shape[axis])
+        return jnp.pad(w, padw)
+
+    if nh1 > nh0:
+        out["wq"] = pad_h(p["wq"], 1, nh1)
+        out["wo"] = pad_h(p["wo"], 0, nh1)
+        if "bq" in p:
+            out["bq"] = pad_h(p["bq"], 0, nh1)
+    if kv1 != kv0:
+        if kv0 == nh0:                 # MHA path: zero-pad kv too
+            out["wk"] = pad_h(p["wk"], 1, kv1)
+            out["wv"] = pad_h(p["wv"], 1, kv1)
+            if "bk" in p:
+                out["bk"] = pad_h(p["bk"], 0, kv1)
+                out["bv"] = pad_h(p["bv"], 0, kv1)
+        else:                          # GQA: replicate + regroup
+            r0, r1 = nh0 // kv0, padded.n_heads // kv1
+            src = (jnp.arange(kv1) * r1) // r0
+            out["wk"] = jnp.take(p["wk"], src, axis=1)
+            out["wv"] = jnp.take(p["wv"], src, axis=1)
+            if "bk" in p:
+                out["bk"] = jnp.take(p["bk"], src, axis=0)
+                out["bv"] = jnp.take(p["bv"], src, axis=0)
+    return out
+
+
+def pad_params_for_serving(cfg: ArchConfig, padded: ArchConfig,
+                           params: dict) -> dict:
+    """Whole-model weight transform (training -> serving head layout)."""
+    if padded is cfg:
+        return params
+    out = jax.tree_util.tree_map(lambda x: x, params)  # shallow copy tree
+    for kind, stack in params.get("stacks", {}).items():
+        if kind in ("ssm", "hybrid_group") or "attn" not in stack:
+            continue
+        out["stacks"][kind] = dict(stack)
+        out["stacks"][kind]["attn"] = jax.vmap(
+            lambda ap: pad_attn_params(cfg, padded, ap))(stack["attn"])
+    if "shared_attn" in params:
+        out["shared_attn"] = dict(params["shared_attn"])
+        out["shared_attn"]["attn"] = pad_attn_params(
+            cfg, padded, params["shared_attn"]["attn"])
+    return out

@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update
+from .schedule import wsd_schedule, cosine_schedule
+from .compress import compress_int8, decompress_int8, compressed_psum

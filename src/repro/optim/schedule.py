@@ -1,0 +1,24 @@
+"""LR schedules: cosine and MiniCPM's WSD (warmup–stable–decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, warmup: int, total: int, floor: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd_schedule(step, *, warmup: int, stable: int, decay: int,
+                 floor: float = 0.01):
+    """MiniCPM WSD: linear warmup, flat plateau, short exponential-ish decay."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(warmup, 1)
+    in_decay = step - (warmup + stable)
+    dec = jnp.exp(jnp.log(floor) * jnp.clip(in_decay / jnp.maximum(decay, 1),
+                                            0, 1))
+    return jnp.where(step < warmup, warm,
+                     jnp.where(in_decay < 0, 1.0, dec))

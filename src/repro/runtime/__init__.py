@@ -1,0 +1,2 @@
+from .ft import TrainLoop, TrainLoopConfig
+from .straggler import StragglerPolicy, ShardDispatcher

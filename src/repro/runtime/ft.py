@@ -1,0 +1,90 @@
+"""Fault-tolerant training loop: checkpoint/restart with exact resume.
+
+Determinism contract: the batch for step *i* is a pure function of
+(data_seed, i) — after a crash, resuming from the last checkpoint replays
+the identical data order, so the recovered run is bitwise identical to an
+uninterrupted one (tested in tests/test_ft.py by injecting a crash).
+
+At 1000+ node scale the same structure holds per coordinator: jax.distributed
+initializes the mesh, every host computes its addressable slice of the
+(step-keyed) batch, and the checkpoint manifest carries the mesh so elastic
+restarts reshard (ckpt.reshard) instead of requiring the old topology.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt import latest_step, load_checkpoint, save_checkpoint
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    max_steps: int = 200
+    data_seed: int = 0
+    keep_last: int = 3
+
+
+class TrainLoop:
+    """Driver around a jitted train_step with restart-from-checkpoint."""
+
+    def __init__(self, cfg: TrainLoopConfig, step_fn: Callable,
+                 make_batch: Callable[[int, np.random.Generator], Dict],
+                 params: PyTree, opt_state: PyTree):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.make_batch = make_batch
+        self.params = params
+        self.opt_state = opt_state
+        self.start_step = 0
+        self.losses: list = []
+
+    def try_resume(self) -> bool:
+        last = latest_step(self.cfg.ckpt_dir)
+        if last is None:
+            return False
+        tree = dict(params=self.params, opt=self.opt_state)
+        restored = load_checkpoint(self.cfg.ckpt_dir, last, tree)
+        self.params, self.opt_state = restored["params"], restored["opt"]
+        self.start_step = last
+        return True
+
+    def _batch_for(self, step: int) -> Dict:
+        # data order is a pure function of (seed, step): replay-exact resume
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.cfg.data_seed, step]))
+        return self.make_batch(step, rng)
+
+    def run(self, until: Optional[int] = None,
+            crash_at: Optional[int] = None) -> PyTree:
+        until = until or self.cfg.max_steps
+        for step in range(self.start_step, until):
+            if crash_at is not None and step == crash_at:
+                raise RuntimeError(f"injected failure at step {step}")
+            batch = self._batch_for(step)
+            self.params, self.opt_state, loss = self.step_fn(
+                self.params, self.opt_state, batch)
+            self.losses.append(float(loss))
+            done = step + 1
+            if done % self.cfg.ckpt_every == 0 or done == until:
+                save_checkpoint(self.cfg.ckpt_dir, done,
+                                dict(params=self.params, opt=self.opt_state))
+                self._gc()
+        return self.params
+
+    def _gc(self):
+        steps = sorted(int(d.split("_")[1])
+                       for d in os.listdir(self.cfg.ckpt_dir)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[: -self.cfg.keep_last]:
+            import shutil
+            shutil.rmtree(os.path.join(self.cfg.ckpt_dir, f"step_{s:08d}"))

@@ -1,0 +1,65 @@
+"""Straggler mitigation for the data plane (control-plane logic).
+
+On a large fleet, per-host input pipelines stall (GCS tail latency, host
+preemption).  The dispatcher tracks per-shard fetch deadlines and applies
+bounded-staleness backfill: a shard that misses its deadline is served the
+deterministic *backup batch* for that (step, shard) — a different sample
+from the same distribution — so the SPMD step never blocks on one host.
+The punctuation-aligned TStream engine uses the same policy for late event
+shards (DESIGN.md §6).
+
+Pure-python control logic with an injectable clock — unit-testable without
+a fleet.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    deadline_s: float = 1.0        # per-shard fetch budget
+    max_backfill_ratio: float = 0.2  # alarm threshold
+    backup_seed_offset: int = 1_000_003
+
+
+class ShardDispatcher:
+    """Tracks shard fetch latencies; decides fetch vs backfill per shard."""
+
+    def __init__(self, n_shards: int, policy: StragglerPolicy,
+                 clock: Callable[[], float] = time.monotonic):
+        self.n = n_shards
+        self.policy = policy
+        self.clock = clock
+        self.backfilled: Dict[int, int] = {}   # step -> count
+        self.latencies: list = []
+
+    def dispatch(self, step: int, fetchers: Dict[int, Callable[[], object]],
+                 backup: Callable[[int, int], object]):
+        """fetchers: shard -> thunk (may be slow).  backup(step, shard) is
+        the deterministic replacement.  Returns shard -> batch."""
+        out = {}
+        n_backfilled = 0
+        for shard in range(self.n):
+            t0 = self.clock()
+            batch = None
+            try:
+                batch = fetchers[shard]()
+            except TimeoutError:
+                batch = None
+            dt = self.clock() - t0
+            self.latencies.append(dt)
+            if batch is None or dt > self.policy.deadline_s:
+                batch = backup(step, shard)
+                n_backfilled += 1
+            out[shard] = batch
+        self.backfilled[step] = n_backfilled
+        return out
+
+    @property
+    def backfill_alarm(self) -> bool:
+        total = sum(self.backfilled.values())
+        steps = max(len(self.backfilled), 1)
+        return total / (steps * self.n) > self.policy.max_backfill_ratio

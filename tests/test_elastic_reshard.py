@@ -1,0 +1,54 @@
+"""Elastic restart: a checkpoint written under one mesh restores onto a
+different mesh (reshard), bitwise-equal values.  Runs in a subprocess with
+8 placeholder devices (pytest itself stays on the real single device)."""
+import os
+import subprocess
+import sys
+
+WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.ckpt import save_checkpoint, load_checkpoint
+
+tree = dict(
+    w=jnp.arange(float(16 * 8)).reshape(16, 8),
+    moe=dict(e=jnp.arange(float(8 * 4 * 2)).reshape(8, 4, 2)),
+)
+mesh_a = jax.make_mesh((2, 4), ("data", "model"))
+place_a = dict(
+    w=jax.device_put(tree["w"], NamedSharding(mesh_a, P("data", "model"))),
+    moe=dict(e=jax.device_put(tree["moe"]["e"],
+                              NamedSharding(mesh_a, P(("data", "model"),
+                                                      None, None)))),
+)
+save_checkpoint("/tmp/elastic_ckpt", 1, place_a)
+
+# "failure": restore onto a different topology (4x2) and a shrunken (1x8)
+for shape, axes in [((4, 2), ("data", "model")), ((1, 8), ("data", "model"))]:
+    mesh_b = jax.make_mesh(shape, axes)
+    shardings = dict(
+        w=NamedSharding(mesh_b, P("data", "model")),
+        moe=dict(e=NamedSharding(mesh_b, P(("data", "model"), None, None))),
+    )
+    restored = load_checkpoint("/tmp/elastic_ckpt", 1,
+                               jax.eval_shape(lambda: tree), shardings)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+    np.testing.assert_array_equal(np.asarray(restored["moe"]["e"]),
+                                  np.asarray(tree["moe"]["e"]))
+    assert restored["w"].sharding.mesh.shape == dict(zip(axes, shape))
+print("ELASTIC_OK")
+"""
+
+
+def test_reshard_across_meshes(tmp_path):
+    script = tmp_path / "elastic_worker.py"
+    script.write_text(WORKER)
+    proc = subprocess.run([sys.executable, str(script)], cwd=os.getcwd(),
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "ELASTIC_OK" in proc.stdout

@@ -1,0 +1,40 @@
+"""OB bid rejection semantics (the paper's 'rejected' notifications) and
+engine-stat invariants under the hypothesis harness."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.apps import OB
+from repro.core.scheduler import DualModeEngine, EngineConfig
+
+
+def test_bid_rejection_matches_oracle_decisions():
+    rng = np.random.default_rng(5)
+    stream = OB.gen_events(rng, 256)
+    store = OB.make_store()
+    out_t = DualModeEngine(OB, store, EngineConfig("tstream")).run_stream(
+        store.values, stream, 128)
+    out_l = DualModeEngine(OB, store, EngineConfig("lock")).run_stream(
+        store.values, stream, 128)
+    rej_t = np.concatenate([np.asarray(o["rejected"]) for o in out_t[0]])
+    rej_l = np.concatenate([np.asarray(o["rejected"]) for o in out_l[0]])
+    np.testing.assert_array_equal(rej_t, rej_l)
+    assert rej_t.sum() > 0, "workload should produce some rejections"
+    # quantities never negative (consistency property, paper §IV-D)
+    vals = np.asarray(out_t[1])
+    assert np.all(vals[:-1, 1] >= -1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_quantities_never_negative(seed):
+    """Consistency (paper §IV-D): bounded bids can never drive quantity
+    below zero, whatever the interleaving."""
+    rng = np.random.default_rng(seed)
+    stream = OB.gen_events(rng, 128)
+    stream["qtys"] = (stream["qtys"] * 100).astype(np.float32)  # aggressive
+    store = OB.make_store()
+    _, vals = DualModeEngine(OB, store, EngineConfig("tstream")).run_stream(
+        store.values, stream, 64)
+    assert np.all(np.asarray(vals)[:-1, 1] >= -1e-3)

@@ -1,0 +1,93 @@
+"""Regression-lock the paper's headline findings (small workloads).
+
+These assert the *orderings* the paper reports (its Figures 8/10/11), on
+the modeled 40-wide executor over measured schedule structure.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import throughput_model
+from repro.apps import ALL_APPS
+
+WIDTH = 40
+
+
+def tput(app, events, schemes, **kw):
+    store = app.make_store()
+    res = throughput_model(app, store, events, schemes, [WIDTH], **kw)
+    return {s: d["by_width"][WIDTH] for s, d in res.items()}
+
+
+def test_tstream_beats_prior_on_gs():
+    """Paper Finding 1: TStream outperforms prior schemes at scale."""
+    app = ALL_APPS["gs"]
+    rng = np.random.default_rng(0)
+    events = {k: jnp.asarray(v) for k, v in app.gen_events(rng, 200).items()}
+    t = tput(app, events, ["tstream", "lock", "pat", "mvlk"])
+    assert t["tstream"] > 2 * t["pat"] > t["lock"]
+    assert t["tstream"] > t["mvlk"] >= t["lock"]
+
+
+def test_tstream_beats_prior_on_sl_with_dependencies():
+    """Paper Finding 1 on SL (heavy data dependencies)."""
+    app = ALL_APPS["sl"]
+    rng = np.random.default_rng(1)
+    events = {k: jnp.asarray(v) for k, v in app.gen_events(rng, 200).items()}
+    t = tput(app, events, ["tstream", "lock", "pat"])
+    assert t["tstream"] > t["pat"] > t["lock"]
+
+
+def test_pat_degrades_with_multipartition_ratio():
+    """Paper Finding 3a / Fig 10: PAT's schedule depth grows with the
+    multi-partition ratio (partition-lock coupling); TStream's does not.
+    Asserted on the deterministic schedule structure (rounds), which is
+    immune to wall-clock noise."""
+    from benchmarks.common import engine_stats
+    app = ALL_APPS["gs"]
+    rounds = {}
+    for ratio in (0.0, 1.0):
+        rng = np.random.default_rng(2)
+        events = {k: jnp.asarray(v) for k, v in app.gen_events(
+            rng, 150, n_partitions=16, mp_ratio=ratio, mp_len=6).items()}
+        store = app.make_store()
+        st_p, _, _ = engine_stats(app, store, events, "pat", n_partitions=16)
+        st_t, _, _ = engine_stats(app, store, events, "tstream")
+        rounds[ratio] = (float(st_p.rounds), float(st_t.rounds))
+    assert rounds[1.0][0] > 3 * rounds[0.0][0]      # PAT depth explodes
+    assert rounds[1.0][1] <= rounds[0.0][1] + 3     # TStream flat
+
+
+def test_tstream_tolerates_skew():
+    """Paper Finding 3c / Fig 11b: prior schemes degrade under skew,
+    TStream's log-depth fast path stays within 2x."""
+    app = ALL_APPS["gs"]
+    out = {}
+    for theta in (0.0, 1.2):
+        rng = np.random.default_rng(3)
+        events = {k: jnp.asarray(v) for k, v in app.gen_events(
+            rng, 150, theta=theta, read_ratio=0.0).items()}
+        out[theta] = tput(app, events, ["tstream", "lock"])
+    assert out[1.2]["tstream"] > 0.5 * out[0.0]["tstream"]
+
+
+def test_interval_increases_throughput():
+    """Paper Fig 12a: larger punctuation interval -> higher throughput
+    (more parallelism to amortize sync)."""
+    from benchmarks.common import engine_stats, modeled_time
+    app = ALL_APPS["tp"]
+    tputs = []
+    for interval in (50, 500):
+        rng = np.random.default_rng(4)
+        store = app.make_store()
+        events = {k: jnp.asarray(v)
+                  for k, v in app.gen_events(rng, interval).items()}
+        stats, secs, _ = engine_stats(app, store, events, "tstream")
+        stats_l, secs_l, _ = engine_stats(app, store, events, "lock")
+        t_op = secs_l / max(float(stats_l.rounds), 1.0)
+        tputs.append(interval / modeled_time(stats, "tstream", WIDTH,
+                                             interval, t_op))
+    assert tputs[1] > tputs[0]

@@ -1,0 +1,105 @@
+"""Property-based tests (hypothesis): TStream's restructured execution is
+conflict-equivalent to timestamp order on *arbitrary* generated workloads —
+the system invariant of paper Definition 2."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engines import evaluate
+from repro.core.types import ASSOC_FUNS, CORE_FUNS, OpBatch, OpKind, make_store
+
+F_NOP_I, F_READ_I, F_PUT_I, F_ADD_I, F_MAX_I, F_TAKE_I = range(6)
+
+
+def make_opbatch(rng, n_txn, max_ops, n_keys, width, fun_pool, gate_prob=0.0):
+    """Random transactions with distinct keys per txn; optional gating of an
+    op on the success of an earlier op of the same txn (cross-chain CFun)."""
+    n = n_txn * max_ops
+    keys = np.stack([rng.choice(n_keys, size=max_ops, replace=False)
+                     for _ in range(n_txn)])
+    fun = rng.choice(fun_pool, size=(n_txn, max_ops))
+    valid = rng.random((n_txn, max_ops)) < 0.9
+    gate = np.full((n_txn, max_ops), -1, np.int32)
+    for t in range(n_txn):
+        for s in range(1, max_ops):
+            if rng.random() < gate_prob and valid[t, s] and valid[t, s - 1] \
+                    and fun[t, s] in (F_ADD_I, F_PUT_I):
+                gate[t, s] = t * max_ops + (s - 1)
+    kind = np.where(fun == F_READ_I, int(OpKind.READ),
+                    int(OpKind.READ_MODIFY))
+    txn = np.repeat(np.arange(n_txn, dtype=np.int32), max_ops)
+    return OpBatch(
+        uid=jnp.asarray(keys.reshape(n), jnp.int32),
+        ts=jnp.asarray(txn),
+        txn=jnp.asarray(txn),
+        slot=jnp.asarray(np.tile(np.arange(max_ops, dtype=np.int32), n_txn)),
+        kind=jnp.asarray(kind.reshape(n), jnp.int32),
+        fun=jnp.asarray(fun.reshape(n), jnp.int32),
+        gate=jnp.asarray(gate.reshape(n), jnp.int32),
+        operand=jnp.asarray(
+            rng.uniform(0.5, 10.0, (n, width)).astype(np.float32)),
+        valid=jnp.asarray(valid.reshape(n)),
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       n_txn=st.integers(2, 24),
+       max_ops=st.integers(1, 5),
+       n_keys=st.sampled_from([5, 16, 64]))
+def test_associative_scan_path_matches_oracle(seed, n_txn, max_ops, n_keys):
+    rng = np.random.default_rng(seed)
+    store = make_store([n_keys], 2,
+                       init=jnp.asarray(rng.uniform(0, 5, (n_keys + 1, 2))
+                                        .astype(np.float32)))
+    ops = make_opbatch(rng, n_txn, max_ops, n_keys, 2,
+                       [F_READ_I, F_PUT_I, F_ADD_I])
+    r1, v1, _ = evaluate(store, ops, ASSOC_FUNS, "tstream_scan")
+    r0, v0, _ = evaluate(store, ops, ASSOC_FUNS, "lock")
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v0), rtol=2e-5,
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(r1["pre"]), np.asarray(r0["pre"]),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       n_txn=st.integers(2, 16),
+       n_keys=st.sampled_from([4, 12]),
+       gate_prob=st.sampled_from([0.0, 0.5]))
+def test_lockstep_with_gates_matches_oracle(seed, n_txn, n_keys, gate_prob):
+    """Heavy contention (few keys) + TAKE + gated ops: the dependency-level
+    scheduler plus the sequential fallback must stay exact."""
+    rng = np.random.default_rng(seed)
+    store = make_store([n_keys], 2,
+                       init=jnp.asarray(rng.uniform(5, 30, (n_keys + 1, 2))
+                                        .astype(np.float32)))
+    ops = make_opbatch(rng, n_txn, 4, n_keys, 2,
+                       [F_READ_I, F_PUT_I, F_ADD_I, F_TAKE_I],
+                       gate_prob=gate_prob)
+    r1, v1, _ = evaluate(store, ops, CORE_FUNS, "tstream_lockstep",
+                         has_gates=True)
+    r0, v0, _ = evaluate(store, ops, CORE_FUNS, "lock")
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v0), rtol=2e-5,
+                               atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(r1["success"]),
+                                  np.asarray(r0["success"]))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_parts=st.sampled_from([2, 4, 16]))
+def test_pat_matches_oracle(seed, n_parts):
+    rng = np.random.default_rng(seed)
+    store = make_store([32], 2,
+                       init=jnp.asarray(rng.uniform(5, 30, (33, 2))
+                                        .astype(np.float32)))
+    ops = make_opbatch(rng, 12, 3, 32, 2, [F_READ_I, F_PUT_I, F_ADD_I,
+                                           F_TAKE_I])
+    r1, v1, _ = evaluate(store, ops, CORE_FUNS, "pat", n_partitions=n_parts)
+    r0, v0, _ = evaluate(store, ops, CORE_FUNS, "lock")
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v0), rtol=2e-5,
+                               atol=2e-5)

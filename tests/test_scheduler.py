@@ -1,0 +1,78 @@
+"""Dual-mode scheduler: end-to-end punctuation-interval processing."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import ALL_APPS
+from repro.core.scheduler import DualModeEngine, EngineConfig
+
+
+@pytest.mark.parametrize("app_name", list(ALL_APPS))
+def test_stream_run_matches_lock(app_name):
+    """Running several punctuation intervals through TStream's dual-mode
+    engine yields the same state evolution as the LOCK (oracle) engine."""
+    app = ALL_APPS[app_name]
+    rng = np.random.default_rng(7)
+    stream = app.gen_events(rng, 96)
+    store = app.make_store()
+
+    eng_t = DualModeEngine(app, store, EngineConfig(scheme="tstream"))
+    eng_l = DualModeEngine(app, store, EngineConfig(scheme="lock"))
+    outs_t, vals_t = eng_t.run_stream(store.values, stream, punct_interval=32)
+    outs_l, vals_l = eng_l.run_stream(store.values, stream, punct_interval=32)
+
+    np.testing.assert_allclose(np.asarray(vals_t), np.asarray(vals_l),
+                               rtol=1e-5, atol=1e-5)
+    for ot, ol in zip(outs_t, outs_l):
+        for k in ot:
+            np.testing.assert_allclose(np.asarray(ot[k]), np.asarray(ol[k]),
+                                       rtol=1e-5, atol=1e-5, err_msg=k)
+
+
+def test_outputs_have_batch_shape():
+    app = ALL_APPS["tp"]
+    rng = np.random.default_rng(0)
+    stream = app.gen_events(rng, 64)
+    store = app.make_store()
+    eng = DualModeEngine(app, store, EngineConfig())
+    outs, _ = eng.run_stream(store.values, stream, punct_interval=64)
+    assert outs[0]["toll"].shape == (64,)
+    assert np.all(np.isfinite(np.asarray(outs[0]["toll"])))
+
+
+def test_abort_repass_masks_failed_txns():
+    """§IV-C2 abort handling: with abort_repass, a failed transfer leaves no
+    partial effects (rollback-free re-execution)."""
+    app = ALL_APPS["sl"]
+    rng = np.random.default_rng(3)
+    stream = app.gen_events(rng, 64)
+    # huge amounts -> most transfers fail on insufficient balance
+    stream["amount"] = (stream["amount"] * 100).astype(np.float32)
+    store = app.make_store()
+    eng = DualModeEngine(app, store,
+                         EngineConfig(scheme="tstream", abort_repass=True))
+    outs, vals = eng.run_stream(store.values, stream, punct_interval=64)
+    # conservation: deposits add money; transfers conserve it.  With the
+    # repass, failed transfers contribute nothing.
+    deposited = np.sum(stream["amount"][~stream["is_transfer"]][:64]
+                       if len(stream["amount"]) >= 64 else 0)
+    total_before = float(np.sum(np.asarray(store.values)))
+    total_after = float(np.sum(np.asarray(vals)))
+    moved = total_after - total_before
+    assert moved >= -1e-3
+    # committed transfers conserve: delta == 2 * sum(deposit amounts)
+    dep_amt = stream["amount"][:64][~stream["is_transfer"][:64]]
+    np.testing.assert_allclose(moved, 2 * float(np.sum(dep_amt)), rtol=1e-4)
+
+
+def test_latency_stats_exposed():
+    app = ALL_APPS["gs"]
+    rng = np.random.default_rng(0)
+    store = app.make_store()
+    eng = DualModeEngine(app, store, EngineConfig())
+    events = {k: jnp.asarray(v) for k, v in app.gen_events(rng, 32).items()}
+    out, vals, stats = eng.step(store.values, events, 0)
+    assert int(stats.n_chains) >= 1
+    assert int(stats.max_chain) >= 1

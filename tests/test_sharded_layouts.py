@@ -1,0 +1,20 @@
+"""Chain-shard layout correctness (the paper's NUMA configurations) as a
+pytest — all three layouts must equal the sequential oracle.  Runs in a
+subprocess (needs an 8-device placeholder mesh)."""
+import json
+import os
+import subprocess
+import sys
+
+
+def test_all_layouts_oracle_correct():
+    worker = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                          "fig14_numa_worker.py")
+    proc = subprocess.run([sys.executable, worker], capture_output=True,
+                          text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-1500:]
+    data = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert set(data) == {"shared_nothing", "shared_per_socket",
+                         "shared_everything"}
+    for layout, d in data.items():
+        assert d["correct"], f"{layout} diverged from the oracle"

@@ -1,0 +1,125 @@
+"""Substrate tests: checkpoint/restart exactness, elastic reshard,
+straggler policy, optimizer, gradient compression, data pipeline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import latest_step, load_checkpoint, save_checkpoint
+from repro.data import PipelineConfig, StreamingPipeline
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         compress_int8, decompress_int8, cosine_schedule,
+                         wsd_schedule)
+from repro.runtime import ShardDispatcher, StragglerPolicy, TrainLoop, \
+    TrainLoopConfig
+
+
+def _tiny_setup(tmp):
+    cfg = AdamWConfig(lr=1e-2, state_dtype=jnp.float32)
+    params = dict(w=jnp.ones((4, 4)), b=jnp.zeros((4,)))
+    opt = adamw_init(params, cfg)
+
+    def step_fn(params, opt_state, batch):
+        def loss(p):
+            y = batch["x"] @ p["w"] + p["b"]
+            return jnp.mean((y - batch["y"]) ** 2)
+        l, g = jax.value_and_grad(loss)(params)
+        p2, s2 = adamw_update(params, g, opt_state, cfg)
+        return p2, s2, l
+
+    def make_batch(step, rng):
+        x = rng.normal(size=(8, 4)).astype(np.float32)
+        return dict(x=jnp.asarray(x), y=jnp.asarray(x @ np.ones((4, 4),
+                                                               np.float32)))
+
+    return jax.jit(step_fn), make_batch, params, opt
+
+
+def test_crash_restart_bitwise_exact(tmp_path):
+    step_fn, make_batch, params, opt = _tiny_setup(tmp_path)
+    cfg = TrainLoopConfig(ckpt_dir=str(tmp_path / "a"), ckpt_every=10,
+                          max_steps=40)
+    # uninterrupted run
+    loop = TrainLoop(cfg, step_fn, make_batch, params, opt)
+    ref = loop.run()
+
+    # crashed + resumed run
+    cfg2 = TrainLoopConfig(ckpt_dir=str(tmp_path / "b"), ckpt_every=10,
+                           max_steps=40)
+    loop2 = TrainLoop(cfg2, step_fn, make_batch, params, opt)
+    with pytest.raises(RuntimeError):
+        loop2.run(crash_at=25)
+    loop3 = TrainLoop(cfg2, step_fn, make_batch, params, opt)
+    assert loop3.try_resume() and loop3.start_step == 20
+    out = loop3.run()
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(ref[k]),
+                                      np.asarray(out[k]))
+
+
+def test_ckpt_reshard_roundtrip(tmp_path):
+    tree = dict(a=jnp.arange(12.0).reshape(3, 4),
+                nested=dict(b=jnp.ones((5,), jnp.bfloat16)))
+    save_checkpoint(str(tmp_path), 3, tree)
+    assert latest_step(str(tmp_path)) == 3
+    restored = load_checkpoint(str(tmp_path), 3, jax.eval_shape(lambda: tree))
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_straggler_backfill():
+    clock = iter(np.arange(0, 100, 0.1)).__next__
+    disp = ShardDispatcher(4, StragglerPolicy(deadline_s=0.5), clock=clock)
+
+    def slow():
+        for _ in range(9):
+            clock()
+        return "slow-batch"
+
+    fetchers = {0: lambda: "ok0", 1: slow, 2: lambda: "ok2",
+                3: lambda: (_ for _ in ()).throw(TimeoutError())}
+    out = disp.dispatch(0, fetchers, backup=lambda s, sh: f"backup{sh}")
+    assert out[0] == "ok0" and out[2] == "ok2"
+    assert out[1] == "backup1" and out[3] == "backup3"
+    assert disp.backfilled[0] == 2
+
+
+def test_schedules_monotone_segments():
+    import jax.numpy as jnp
+    s = wsd_schedule(jnp.asarray(0), warmup=10, stable=100, decay=50)
+    assert float(s) == 0.0
+    assert float(wsd_schedule(jnp.asarray(50), warmup=10, stable=100,
+                              decay=50)) == 1.0
+    end = float(wsd_schedule(jnp.asarray(160), warmup=10, stable=100,
+                             decay=50))
+    assert end <= 0.02
+    assert 0.0 < float(cosine_schedule(jnp.asarray(500), warmup=10,
+                                       total=1000)) < 1.0
+
+
+def test_int8_compression_roundtrip_and_error_feedback():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1000,)).astype(np.float32))
+    q, s = compress_int8(x)
+    y = decompress_int8(q, s, x.shape)
+    err = np.abs(np.asarray(y - x))
+    assert err.max() < np.abs(np.asarray(x)).max() / 100
+    assert q.dtype == jnp.int8
+
+
+def test_pipeline_deterministic_and_stats():
+    pipe = StreamingPipeline(PipelineConfig())
+    b1 = pipe.batch_for_step(5)
+    b2 = pipe.batch_for_step(5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    rng = np.random.default_rng(0)
+    out = pipe.ingest(rng, 64)
+    w = pipe.mixture_weights()
+    assert np.isclose(w.sum(), 1.0) and np.all(w > 0)
+    # domain counters actually accumulated through the TStream engine
+    vals = np.asarray(pipe.stats_values)
+    assert vals[:16, 1].sum() == 64  # doc_count lane
