@@ -39,6 +39,33 @@ def wall_time(fn: Callable, *args, iters: int = 5) -> float:
     return float(np.median(ts))
 
 
+def stream_wall_time_pair(engine, values, event_stream, interval: int, *,
+                          iters: int = 9):
+    """((min, median) unfused, (min, median) fused) wall seconds, measured
+    **interleaved** so drift in machine load lands on both drivers equally
+    — an A/B wall-clock comparison, not two separate absolute
+    measurements.  The *minimum* is the headline estimator: external load
+    only ever adds time, so min estimates the intrinsic cost (the same
+    rationale as ``timeit``; DESIGN.md §8.3).  The median is reported
+    alongside for context.
+    """
+    for fused in (False, True):  # warm both compiles before timing either
+        jax.block_until_ready(
+            engine.run_stream(values, event_stream, interval, fused=fused))
+    tu, tf = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            engine.run_stream(values, event_stream, interval, fused=False))
+        tu.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            engine.run_stream(values, event_stream, interval, fused=True))
+        tf.append(time.perf_counter() - t0)
+    return ((float(np.min(tu)), float(np.median(tu))),
+            (float(np.min(tf)), float(np.median(tf))))
+
+
 def engine_stats(app, store, events, scheme: str, **kw):
     """Run one interval, return (stats, wall_seconds, results)."""
     ops, _ = build_opbatch(app, store, events, jnp.int32(0))

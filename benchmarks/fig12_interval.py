@@ -12,10 +12,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.apps import ALL_APPS
+from repro.core.scheduler import DualModeEngine, EngineConfig
 
-from .common import engine_stats, modeled_time, throughput_model
+from .common import engine_stats, modeled_time, stream_wall_time_pair
 
 WIDTH = 40
+STREAM_INTERVALS = 8   # intervals per measured end-to-end stream
 
 
 def run(quick: bool = True):
@@ -37,7 +39,19 @@ def run(quick: bool = True):
             # p99 latency: arrive early in the interval -> wait ~full fill
             fill = interval / max(tput, 1e-9)
             p99 = 0.99 * fill + t_batch
+            # end-to-end stream wall time: fused scan vs per-interval loop
+            # (the paper's per-interval overhead lever, DESIGN.md §2.4)
+            n_events = interval * STREAM_INTERVALS
+            stream = app.gen_events(np.random.default_rng(14), n_events)
+            eng = DualModeEngine(app, store, EngineConfig(scheme="tstream"))
+            (secs_u, _), (secs_f, _) = stream_wall_time_pair(
+                eng, store.values, stream, interval, iters=3)
             rows.append(dict(fig="fig12", app=name, interval=interval,
                              events_per_s=tput, p99_latency_s=p99,
-                             measured_batch_s=secs))
+                             measured_batch_s=secs,
+                             stream_fused_s=secs_f,
+                             stream_unfused_s=secs_u,
+                             stream_fused_events_per_s=n_events / secs_f,
+                             stream_unfused_events_per_s=n_events / secs_u,
+                             fused_speedup=secs_u / secs_f))
     return rows

@@ -1,0 +1,55 @@
+"""Fused vs unfused streaming: quantify the per-interval host overhead.
+
+The fused driver (DESIGN.md §2.4) runs the whole stream as one jitted
+``lax.scan``; the unfused driver pays one jit dispatch + store rebuild +
+host↔device round-trip per punctuation interval.  Rows are machine-
+readable — one per (app, scheme, interval, fused flag) — and land in
+``BENCH_fused_stream.json`` at the repo root via ``benchmarks/run.py`` so
+successive PRs have a perf trajectory.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.apps import ALL_APPS
+from repro.core.scheduler import DualModeEngine, EngineConfig
+
+from .common import stream_wall_time_pair
+
+
+def _cases(quick: bool, smoke: bool):
+    if smoke:   # CI bit-rot canary: seconds, not minutes
+        return [("gs", "tstream", 64, 4)]
+    if quick:
+        return [
+            ("gs", "tstream", 512, 32),   # acceptance case
+            ("gs", "tstream", 128, 64),
+            ("tp", "tstream", 512, 32),
+            ("gs", "mvlk", 256, 8),
+        ]
+    return [(a, s, i, 32) for a in ALL_APPS for s in ("tstream", "mvlk")
+            for i in (128, 512, 1024)]
+
+
+def run(quick: bool = True, smoke: bool = False):
+    rows = []
+    for app_name, scheme, interval, n_intervals in _cases(quick, smoke):
+        app = ALL_APPS[app_name]
+        rng = np.random.default_rng(17)
+        n_events = interval * n_intervals
+        stream = app.gen_events(rng, n_events)
+        store = app.make_store()
+        eng = DualModeEngine(app, store, EngineConfig(scheme=scheme))
+        (u_min, u_med), (f_min, f_med) = stream_wall_time_pair(
+            eng, store.values, stream, interval,
+            iters=3 if smoke else 15)
+        for fused, w_min, w_med in ((False, u_min, u_med),
+                                    (True, f_min, f_med)):
+            rows.append(dict(
+                fig="fused_stream", app=app_name, scheme=scheme,
+                interval=interval, n_events=n_events, fused=fused,
+                wall_s=w_min, median_wall_s=w_med,
+                events_per_s=n_events / w_min,
+            ))
+        rows[-1]["fused_speedup_vs_unfused"] = u_min / f_min
+    return rows

@@ -9,6 +9,14 @@ All engines share one contract::
 blotters.  ``stats`` carries structural parallelism counters (rounds, chain
 counts) consumed by the benchmark harness's executor model.
 
+The O(N log N) ``restructure`` lexsort runs **exactly once per evaluated
+batch**: callers that already hold the sorted view pass it via
+``prestructured=(sops, chains)`` and every chain-based scheme (tstream
+variants + mvlk) threads it through instead of re-sorting.  A batch whose
+``valid`` mask was tightened *after* sorting (the scheduler's abort repass)
+is still legal input: chain geometry only depends on uids, and all paths
+neutralize invalid mid-chain ops.
+
 Schemes (see DESIGN.md §2 for the multicore->TPU schedule mapping):
 
 * ``tstream``   — D2 dynamic restructuring.  Associative-only apps take the
@@ -31,15 +39,16 @@ Schemes (see DESIGN.md §2 for the multicore->TPU schedule mapping):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Dict, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .restructure import (Chains, restructure, segmented_scan_affine,
-                          segmented_scan_max)
-from .types import FunSpec, OpBatch, OpKind, OpResults, StateStore
+from .restructure import (Chains, commit_index, restructure,
+                          segmented_scan_affine, segmented_scan_max)
+from .types import FunSpec, OpBatch, OpKind, StateStore
+
+Prestructured = Tuple[OpBatch, Chains]
 
 
 # ---------------------------------------------------------------------------
@@ -61,15 +70,29 @@ def apply_funs(funs: Tuple[FunSpec, ...], fun_id: jnp.ndarray,
 
 def affine_coeffs(funs: Tuple[FunSpec, ...], fun_id: jnp.ndarray,
                   operand: jnp.ndarray):
-    """Per-op (a, b) affine coefficients; identity for non-affine funs."""
-    ident = (jnp.ones_like(operand), jnp.zeros_like(operand))
+    """Per-op (a, b) affine coefficients; identity for non-affine funs.
+
+    When every fun declares a simple affine shape (``affine_simple``:
+    a ∈ {0, 1}, b ∈ {0, operand} — true for the whole core family), the
+    vmapped 5-branch switch collapses to two tiny LUT gathers + a select,
+    with bit-identical outputs.
+    """
+    simple = [f.affine_simple if f.affine is not None else (1.0, False)
+              for f in funs]
+    if all(s is not None for s in simple):
+        a_lut = jnp.asarray([s[0] for s in simple], operand.dtype)
+        b_lut = jnp.asarray([s[1] for s in simple])
+        a = jnp.broadcast_to(jnp.take(a_lut, fun_id)[:, None], operand.shape)
+        b = jnp.where(jnp.take(b_lut, fun_id)[:, None], operand,
+                      jnp.zeros_like(operand))
+        return a, b
+
     branches = [(f.affine if f.affine is not None else (lambda o: (jnp.ones_like(o), jnp.zeros_like(o))))
                 for f in funs]
 
     def one(fid, o):
         return jax.lax.switch(fid, branches, o)
 
-    del ident
     return jax.vmap(one)(fun_id, operand)
 
 
@@ -101,61 +124,193 @@ def _empty_results(n: int, w: int):
 
 # ---------------------------------------------------------------------------
 # TStream fast path: segmented-scan chain evaluation (associative funs only)
+#
+# Split into three stages so the fused stream driver can hoist everything
+# values-independent out of its sequential interval scan (DESIGN.md §2.4):
+#
+#   plan    = tstream_scan_plan(...)        restructure + coefficients +
+#                                           commit gather map (per batch)
+#   plan    = tstream_scan_coefs(plan)      exclusive segmented scans
+#   results = tstream_scan_execute(values, plan)   the only values-dependent
+#                                           part: v0 gather, Fun application,
+#                                           commit — O(N) elementwise+gather
 # ---------------------------------------------------------------------------
-def eval_tstream_scan(store: StateStore, ops: OpBatch,
-                      funs: Tuple[FunSpec, ...], *, use_pallas: bool = False):
-    sops, ch = restructure(ops, store.pad_uid)
-    v0 = jnp.take(store.values, sops.uid, axis=0)          # [N, W]
-    is_max_uid = jnp.take(store.uid_is_max(), sops.uid)    # [N]
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ScanPlan:
+    """Values-independent plan for one batch on the segmented-scan path.
 
-    # affine family scan (non-affine & max-table ops become identity)
+    ``af``/``bf``/``mx`` hold the per-op affine / max *coefficients* after
+    ``tstream_scan_plan`` and the *exclusive segmented scans* of those
+    coefficients after ``tstream_scan_coefs``; ``afi``/``bfi``/``mxi`` are
+    the *inclusive* scans (None until coefs run).  With every fun on this
+    path associative-affine (or max-on-max-table), pre/post are pure
+    coefficient applications — no Fun dispatch in the values-dependent
+    stage.  ``commit_pos``/``commit_ok`` are the [S+1] per-state commit
+    gather map (see ``commit_index``).
+    """
+
+    sops: OpBatch
+    ch: Chains
+    af: jnp.ndarray
+    bf: jnp.ndarray
+    afi: Optional[jnp.ndarray]
+    bfi: Optional[jnp.ndarray]
+    mx: Optional[jnp.ndarray]        # None when the store has no max tables
+    mxi: Optional[jnp.ndarray]
+    is_max_s: Optional[jnp.ndarray]  # (statically elided — saves a scan)
+    commit_pos: jnp.ndarray
+    commit_ok: jnp.ndarray
+
+
+def tstream_scan_plan(store: StateStore, ops: OpBatch,
+                      funs: Tuple[FunSpec, ...], *,
+                      prestructured: Optional[Prestructured] = None,
+                      rowmajor_ts: bool = False) -> ScanPlan:
+    # the scan path evaluates ops purely from (scanned) coefficients: every
+    # fun must be associative (affine family or max) — conditional funs
+    # like TAKE belong on the lockstep path and would silently mis-evaluate
+    # here (identity post, success always True)
+    bad = [f.name for f in funs if not f.associative]
+    if bad:
+        raise ValueError(
+            f"tstream_scan requires associative funs; got {bad} — use the "
+            "lockstep path (scheme='tstream'/'tstream_lockstep') instead")
+    sops, ch = (restructure(ops, store.pad_uid, rowmajor_ts=rowmajor_ts,
+                            light=True)
+                if prestructured is None else prestructured)
+    has_max = any(store.table_is_max)
+
+    # affine family coefficients (non-affine, max-table and invalid ops
+    # become identity — invalid ops can sit mid-chain when a prestructured
+    # batch had its valid mask tightened after sorting)
     a, b = affine_coeffs(funs, sops.fun, sops.operand)
-    neutralize = is_max_uid[:, None]
+    if has_max:
+        is_max_s = jnp.take(store.uid_is_max(), sops.uid)  # [N]
+        neutralize = (is_max_s | ~sops.valid)[:, None]
+    else:
+        is_max_s = None
+        neutralize = (~sops.valid)[:, None]
     a = jnp.where(neutralize, jnp.ones_like(a), a)
     b = jnp.where(neutralize, jnp.zeros_like(b), b)
 
-    # max family scan (ops on non-max tables and READs become -inf)
-    is_max_fun = jnp.asarray([f.is_max for f in funs])[sops.fun]
-    m = jnp.where((is_max_uid & is_max_fun)[:, None], sops.operand, -jnp.inf)
+    # max family (ops on non-max tables, READs and invalid ops -> -inf);
+    # statically elided when no table is max-typed
+    m = None
+    if has_max:
+        is_max_fun = jnp.asarray([f.is_max for f in funs])[sops.fun]
+        m = jnp.where((is_max_s & is_max_fun & sops.valid)[:, None],
+                      sops.operand, -jnp.inf)
 
+    commit_pos, commit_ok = commit_index(sops.uid, store.values.shape[0])
+    return ScanPlan(sops=sops, ch=ch, af=a, bf=b, afi=None, bfi=None,
+                    mx=m, mxi=None, is_max_s=is_max_s,
+                    commit_pos=commit_pos, commit_ok=commit_ok)
+
+
+def tstream_scan_coefs(plan: ScanPlan, *, use_pallas: bool = False) -> ScanPlan:
+    """Segmented scans of the planned coefficients.
+
+    Exclusive scans give each op's ``pre``; composing the op's own raw
+    coefficient on top gives the *inclusive* scans and thereby ``post``
+    without any per-op Fun dispatch at execution time.
+    """
     if use_pallas:
         from repro.kernels.segscan import ops as segscan_ops
-        A, B = segscan_ops.segscan_affine(a, b, ch.seg_start, exclusive=True)
-        M = segscan_ops.segscan_max(m, ch.seg_start, exclusive=True)
+        A, B = segscan_ops.segscan_affine(plan.af, plan.bf,
+                                          plan.ch.seg_start, exclusive=True)
+        M = (segscan_ops.segscan_max(plan.mx, plan.ch.seg_start,
+                                     exclusive=True)
+             if plan.mx is not None else None)
     else:
-        A, B = segmented_scan_affine(a, b, ch.seg_start, exclusive=True)
-        M = segmented_scan_max(m, ch.seg_start, exclusive=True)
+        A, B = segmented_scan_affine(plan.af, plan.bf, plan.ch.seg_start,
+                                     exclusive=True)
+        M = (segmented_scan_max(plan.mx, plan.ch.seg_start, exclusive=True)
+             if plan.mx is not None else None)
+    return _compose_inclusive(plan, A, B, M)
 
-    pre_aff = A * v0 + B
-    pre_max = jnp.maximum(v0, M)
-    pre = jnp.where(is_max_uid[:, None], pre_max, pre_aff)
-    post, success = apply_funs(funs, sops.fun, pre, sops.operand)
 
-    # commit: last op of each chain defines the new state value
-    n = ops.n_ops
-    scatter_uid = jnp.where(ch.seg_end, sops.uid, store.pad_uid)
-    new_values = store.values.at[scatter_uid].set(
-        jnp.where(ch.seg_end[:, None], post, store.values[store.pad_uid]))
-    new_values = new_values.at[store.pad_uid].set(0.0)
+def _compose_inclusive(plan: ScanPlan, A, B, M) -> ScanPlan:
+    """inclusive = raw ∘ exclusive (the op applied on top of its pre)."""
+    Ai = plan.af * A
+    Bi = plan.af * B + plan.bf
+    Mi = jnp.maximum(M, plan.mx) if M is not None else None
+    return dataclasses.replace(plan, af=A, bf=B, afi=Ai, bfi=Bi,
+                               mx=M, mxi=Mi)
+
+
+def tstream_scan_coefs_stream(plan_all: ScanPlan, *,
+                              use_pallas: bool = False) -> ScanPlan:
+    """Coefficient scans for a whole stream of stacked [n_intervals, N]
+    plans.  Non-Pallas: vmapped per-interval scans (bit-identical to the
+    per-interval driver).  Pallas: ONE kernel dispatch over the flattened
+    stream — per-interval seg_start flags isolate the scans.
+    """
+    if not use_pallas:
+        return jax.vmap(tstream_scan_coefs)(plan_all)
+    from repro.kernels.segscan import ops as segscan_ops
+    bn, n, w = plan_all.af.shape
+    flags = plan_all.ch.seg_start.reshape(bn * n)
+    A, B = segscan_ops.segscan_affine(plan_all.af.reshape(bn * n, w),
+                                      plan_all.bf.reshape(bn * n, w),
+                                      flags, exclusive=True)
+    A, B = A.reshape(bn, n, w), B.reshape(bn, n, w)
+    M = None
+    if plan_all.mx is not None:
+        M = segscan_ops.segscan_max(plan_all.mx.reshape(bn * n, w), flags,
+                                    exclusive=True).reshape(bn, n, w)
+    return _compose_inclusive(plan_all, A, B, M)
+
+
+def tstream_scan_execute(values: jnp.ndarray, plan: ScanPlan,
+                         pad_uid: int, *, raw: bool = False):
+    """Values-dependent stage: O(N) gathers/elementwise + one [S+1] select.
+
+    ``raw=True`` returns results in *sorted* chain layout (the fused driver
+    gathers back to flat layout in one batched pass after its scan).
+    """
+    sops, ch = plan.sops, plan.ch
+    n = sops.uid.shape[0]
+    v0 = jnp.take(values, sops.uid, axis=0)                # [N, W]
+    pre = plan.af * v0 + plan.bf
+    post = plan.afi * v0 + plan.bfi
+    if plan.mx is not None:
+        mmask = plan.is_max_s[:, None]
+        pre = jnp.where(mmask, jnp.maximum(v0, plan.mx), pre)
+        post = jnp.where(mmask, jnp.maximum(v0, plan.mxi), post)
+    # every fun on this path is associative -> unconditionally successful;
+    # invalid ops were neutralized to identity, so their post == pre
+    success = sops.valid
+
+    # commit: last op of each chain defines the new state value.  The
+    # update is a per-state gather + select, not an [N] scatter.
+    committed = jnp.take(post, plan.commit_pos, axis=0)         # [S+1, W]
+    new_values = jnp.where(plan.commit_ok[:, None], committed, values)
+    new_values = new_values.at[pad_uid].set(0.0)
 
     # invalid (padding) ops record nothing — match the oracle's layout
     vmask = sops.valid
     pre = jnp.where(vmask[:, None], pre, 0.0)
     post = jnp.where(vmask[:, None], post, 0.0)
     success = success & vmask
-    res = _scatter_results(n, ops.width, ch.order, pre, post, success)
-    stats = EngineStats(rounds=jnp.ceil(jnp.log2(ch.max_len.astype(jnp.float32) + 1)),
-                        n_chains=ch.n_chains, max_chain=ch.max_len,
-                        n_ops=n, scheme="tstream", path="segscan")
+    res = dict(pre=pre, post=post, success=success)
+    if not raw:
+        res = {k: ch.untake(v) for k, v in res.items()}
+    stats = EngineStats(
+        rounds=jnp.ceil(jnp.log2(ch.max_len.astype(jnp.float32) + 1)),
+        n_chains=ch.n_chains, max_chain=ch.max_len,
+        n_ops=n, scheme="tstream", path="segscan")
     return res, new_values, stats
 
 
-def _scatter_results(n, w, order, pre, post, success):
-    out = _empty_results(n, w)
-    out["pre"] = out["pre"].at[order].set(pre)[:n]
-    out["post"] = out["post"].at[order].set(post)[:n]
-    out["success"] = out["success"].at[order].set(success)[:n]
-    return out
+def eval_tstream_scan(store: StateStore, ops: OpBatch,
+                      funs: Tuple[FunSpec, ...], *, use_pallas: bool = False,
+                      prestructured: Optional[Prestructured] = None,
+                      rowmajor_ts: bool = False):
+    plan = tstream_scan_plan(store, ops, funs, prestructured=prestructured,
+                             rowmajor_ts=rowmajor_ts)
+    plan = tstream_scan_coefs(plan, use_pallas=use_pallas)
+    return tstream_scan_execute(store.values, plan, store.pad_uid)
 
 
 # ---------------------------------------------------------------------------
@@ -171,7 +326,7 @@ def _chain_levels(sops: OpBatch, ch: Chains, n: int, max_levels: int):
     """
     INF = jnp.int32(10 ** 6)
     # seg id of each op in pre-sort layout, so mate (flat idx) -> chain id
-    seg_flat = jnp.zeros((n + 1,), jnp.int32).at[ch.order].set(ch.seg_id)
+    seg_flat = ch.untake(ch.seg_id)
     gated = (sops.gate >= 0) & sops.valid
     mate_chain = seg_flat[jnp.maximum(sops.gate, 0)]
     chain_has_gate = jax.ops.segment_max(gated.astype(jnp.int32), ch.seg_id,
@@ -223,8 +378,10 @@ def _lockstep_sweep(values, sops: OpBatch, ch: Chains,
 
 def eval_tstream_lockstep(store: StateStore, ops: OpBatch,
                           funs: Tuple[FunSpec, ...], *, max_dep_levels: int = 3,
-                          has_gates: bool = False):
-    sops, ch = restructure(ops, store.pad_uid)
+                          has_gates: bool = False,
+                          prestructured: Optional[Prestructured] = None):
+    sops, ch = (restructure(ops, store.pad_uid) if prestructured is None
+                else prestructured)
     n = ops.n_ops
     values = store.values
     results = _empty_results(n, ops.width)
@@ -249,8 +406,7 @@ def eval_tstream_lockstep(store: StateStore, ops: OpBatch,
             rounds = rounds + lvl_rounds
         # sequential fallback for ops in unresolved chains (cycles)
         unresolved_ops_sorted = jnp.take(unresolved, ch.seg_id) & sops.valid
-        unresolved_ops = jnp.zeros((n + 1,), bool).at[ch.order].set(
-            unresolved_ops_sorted)[:n]
+        unresolved_ops = ch.untake(unresolved_ops_sorted)
         values, results = _sequential_sweep(values, ops, funs, results,
                                             mask_flat=unresolved_ops,
                                             pad_uid=store.pad_uid)
@@ -321,7 +477,8 @@ def eval_lock(store: StateStore, ops: OpBatch, funs):
 # MVLK: multiversion — writes serialize per chain, reads resolve in parallel
 # ---------------------------------------------------------------------------
 def eval_mvlk(store: StateStore, ops: OpBatch, funs,
-              *, has_gates: bool = False, max_dep_levels: int = 3):
+              *, has_gates: bool = False, max_dep_levels: int = 3,
+              prestructured: Optional[Prestructured] = None):
     """Writes run as (lockstep) chains; READs are version lookups.
 
     Structurally: read ops are identity within chains (their ``pre`` is the
@@ -330,12 +487,15 @@ def eval_mvlk(store: StateStore, ops: OpBatch, funs,
     model* difference (reads don't occupy chain rounds) is reflected in the
     stats: rounds count only write-chain depth.
     """
-    sops, ch = restructure(ops, store.pad_uid)
+    if prestructured is None:
+        prestructured = restructure(ops, store.pad_uid)
+    sops, ch = prestructured
     is_write = sops.kind != int(OpKind.READ)
     write_pos = _masked_positions(is_write, ch)
     write_depth = jnp.max(jnp.where(is_write, write_pos, -1)) + 1
     res, values, st = eval_tstream_lockstep(
-        store, ops, funs, has_gates=has_gates, max_dep_levels=max_dep_levels)
+        store, ops, funs, has_gates=has_gates, max_dep_levels=max_dep_levels,
+        prestructured=prestructured)
     stats = EngineStats(rounds=write_depth, n_chains=ch.n_chains,
                         max_chain=st.max_chain, n_ops=ops.n_ops,
                         scheme="mvlk", path="mv")
@@ -471,26 +631,41 @@ def eval_nolock(store: StateStore, ops: OpBatch, funs):
 SCHEMES = ("tstream", "tstream_scan", "tstream_lockstep", "lock", "mvlk",
            "pat", "nolock")
 
+# schemes whose evaluation consumes the restructured (chain-sorted) view —
+# for these, ``evaluate`` lexsorts exactly once and threads the result down.
+CHAIN_SCHEMES = frozenset(
+    {"tstream", "tstream_scan", "tstream_lockstep", "mvlk"})
+
 
 def evaluate(store: StateStore, ops: OpBatch, funs: Tuple[FunSpec, ...],
              scheme: str = "tstream", *, associative_only: bool = False,
              has_gates: bool = False, n_partitions: int = 16,
-             max_dep_levels: int = 3, use_pallas: bool = False):
+             max_dep_levels: int = 3, use_pallas: bool = False,
+             prestructured: Optional[Prestructured] = None,
+             rowmajor_ts: bool = False):
+    if scheme in CHAIN_SCHEMES and prestructured is None:
+        prestructured = restructure(ops, store.pad_uid,
+                                    rowmajor_ts=rowmajor_ts)
     if scheme == "tstream":
         if associative_only and not has_gates:
-            return eval_tstream_scan(store, ops, funs, use_pallas=use_pallas)
+            return eval_tstream_scan(store, ops, funs, use_pallas=use_pallas,
+                                     prestructured=prestructured)
         return eval_tstream_lockstep(store, ops, funs, has_gates=has_gates,
-                                     max_dep_levels=max_dep_levels)
+                                     max_dep_levels=max_dep_levels,
+                                     prestructured=prestructured)
     if scheme == "tstream_scan":
-        return eval_tstream_scan(store, ops, funs, use_pallas=use_pallas)
+        return eval_tstream_scan(store, ops, funs, use_pallas=use_pallas,
+                                 prestructured=prestructured)
     if scheme == "tstream_lockstep":
         return eval_tstream_lockstep(store, ops, funs, has_gates=has_gates,
-                                     max_dep_levels=max_dep_levels)
+                                     max_dep_levels=max_dep_levels,
+                                     prestructured=prestructured)
     if scheme == "lock":
         return eval_lock(store, ops, funs)
     if scheme == "mvlk":
         return eval_mvlk(store, ops, funs, has_gates=has_gates,
-                         max_dep_levels=max_dep_levels)
+                         max_dep_levels=max_dep_levels,
+                         prestructured=prestructured)
     if scheme == "pat":
         return eval_pat(store, ops, funs, n_partitions=n_partitions)
     if scheme == "nolock":

@@ -24,6 +24,9 @@ class Chains:
     """Operation chains over a sorted view of an OpBatch.
 
     ``order``     : sorted index -> original flat op index (gather map)
+    ``inv``       : original flat op index -> sorted index (inverse of
+                    ``order``; lets results return to (txn, slot) layout by
+                    *gather* instead of the much slower CPU/TPU scatter)
     ``seg_start`` : bool[N], True at the first op of each chain
     ``seg_id``    : chain id of each sorted op (== cumsum(seg_start)-1)
     ``pos``       : position of the op inside its chain (ts order)
@@ -33,6 +36,7 @@ class Chains:
     """
 
     order: jnp.ndarray
+    inv: jnp.ndarray
     seg_start: jnp.ndarray
     seg_id: jnp.ndarray
     pos: jnp.ndarray
@@ -44,23 +48,59 @@ class Chains:
         """Gather a flat (pre-sort) per-op array into sorted chain order."""
         return jnp.take(x, self.order, axis=0)
 
+    def untake(self, x_sorted: jnp.ndarray) -> jnp.ndarray:
+        """Gather a sorted per-op array back into flat (pre-sort) layout."""
+        return jnp.take(x_sorted, self.inv, axis=0)
 
-def restructure(ops: OpBatch, pad_uid: int) -> Tuple[OpBatch, Chains]:
+
+def restructure(ops: OpBatch, pad_uid: int, *,
+                rowmajor_ts: bool = False,
+                light: bool = False) -> Tuple[OpBatch, Chains]:
     """Sort the op batch into operation chains.
 
     Invalid (padding) ops are routed to the padding chain (uid = pad_uid) and
     sort to the end; chain order within a state follows (ts, slot) so that a
     transaction's intra-state ops keep their registration order.
+
+    ``rowmajor_ts``: caller's promise that flat row order already equals
+    (ts, slot) lexicographic order — true for every batch built by
+    ``build_opbatch`` (ts = ts_base + txn, rows laid out (txn, slot)).
+    Then the 3-key lexsort collapses to a *single-operand* sort of
+    ``uid << idx_bits | index`` packed keys — ~6x faster on CPU XLA and
+    identical output (the packed low bits are exactly the stable
+    tie-break), and the inverse permutation comes from a vectorized binary
+    search instead of a scatter.  Falls back to the generic lexsort when
+    the packed key would not fit 32 bits.
+
+    ``light``: gather only the columns the segmented-scan path reads
+    (uid, fun, operand, valid); ts/txn/slot/kind/gate are ``None`` in the
+    returned sorted batch.  Lockstep/mvlk callers need the full view.
     """
     uid = jnp.where(ops.valid, ops.uid, pad_uid)
-    order = jnp.lexsort((ops.slot, ops.ts, uid))  # uid major, ts, slot minor
-    uid_s = jnp.take(uid, order)
     n = uid.shape[0]
+    idx_bits = max(n - 1, 1).bit_length()
+    uid_bits = max(int(pad_uid), 1).bit_length()
+    packed_ok = rowmajor_ts and (idx_bits + uid_bits) <= 32
+
+    idx = jnp.arange(n, dtype=jnp.int32)
+    if packed_ok:
+        shift = jnp.uint32(1 << idx_bits)
+        keys = jnp.sort(uid.astype(jnp.uint32) * shift
+                        + idx.astype(jnp.uint32))
+        order = (keys & jnp.uint32((1 << idx_bits) - 1)).astype(jnp.int32)
+        uid_s = (keys // shift).astype(jnp.int32)
+        # inverse permutation: keys are unique, so position == binary search
+        inv = jnp.searchsorted(keys, uid.astype(jnp.uint32) * shift
+                               + idx.astype(jnp.uint32),
+                               method="scan_unrolled").astype(jnp.int32)
+    else:
+        order = jnp.lexsort((ops.slot, ops.ts, uid))  # uid major, ts, slot
+        uid_s = jnp.take(uid, order)
+        inv = jnp.zeros((n,), jnp.int32).at[order].set(idx)
 
     seg_start = jnp.concatenate(
         [jnp.ones((1,), bool), uid_s[1:] != uid_s[:-1]])
     seg_id = jnp.cumsum(seg_start.astype(jnp.int32)) - 1
-    idx = jnp.arange(n, dtype=jnp.int32)
     start_idx = jax.lax.cummax(jnp.where(seg_start, idx, 0))
     pos = idx - start_idx
     seg_end = jnp.concatenate(
@@ -68,17 +108,18 @@ def restructure(ops: OpBatch, pad_uid: int) -> Tuple[OpBatch, Chains]:
 
     sorted_ops = OpBatch(
         uid=uid_s,
-        ts=jnp.take(ops.ts, order),
-        txn=jnp.take(ops.txn, order),
-        slot=jnp.take(ops.slot, order),
-        kind=jnp.take(ops.kind, order),
+        ts=None if light else jnp.take(ops.ts, order),
+        txn=None if light else jnp.take(ops.txn, order),
+        slot=None if light else jnp.take(ops.slot, order),
+        kind=None if light else jnp.take(ops.kind, order),
         fun=jnp.take(ops.fun, order),
-        gate=jnp.take(ops.gate, order),
+        gate=None if light else jnp.take(ops.gate, order),
         operand=jnp.take(ops.operand, order, axis=0),
         valid=jnp.take(ops.valid, order),
     )
     chains = Chains(
         order=order,
+        inv=inv,
         seg_start=seg_start,
         seg_id=seg_id,
         pos=pos,
@@ -87,6 +128,21 @@ def restructure(ops: OpBatch, pad_uid: int) -> Tuple[OpBatch, Chains]:
         max_len=jnp.max(pos) + 1,
     )
     return sorted_ops, chains
+
+
+def commit_index(uid_sorted: jnp.ndarray, n_slots_incl_pad: int):
+    """Per-state commit gather map from the sorted uid column.
+
+    Returns ``(pos, ok)`` with ``pos[u]`` = sorted index of the *last* op
+    of chain ``u`` and ``ok[u]`` = chain ``u`` has ops in this batch.  The
+    state update then becomes a [S+1] gather + select instead of an [N]
+    scatter (CPU/TPU scatters serialize; binary search vectorizes).
+    """
+    slots = jnp.arange(n_slots_incl_pad, dtype=uid_sorted.dtype)
+    pos = jnp.searchsorted(uid_sorted, slots, side="right",
+                           method="scan_unrolled") - 1
+    ok = (pos >= 0) & (jnp.take(uid_sorted, jnp.maximum(pos, 0)) == slots)
+    return jnp.maximum(pos, 0), ok
 
 
 def segmented_scan_affine(a: jnp.ndarray, b: jnp.ndarray,

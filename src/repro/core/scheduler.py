@@ -11,19 +11,34 @@ One engine *step* processes exactly one punctuation interval:
 The punctuation interval is the leading batch axis; the progress controller
 assigns monotonically increasing timestamps (the paper's fetch&add counter
 becomes ``ts_base + arange``: SPMD-deterministic and contention-free).
+
+Two drivers share the per-interval logic (DESIGN.md §2.4):
+
+* ``run_stream(fused=False)`` — the host-side loop: one jit dispatch, one
+  store rebuild and one host<->device round-trip *per interval*.  Kept as
+  the reference / debugging path.
+* ``run_stream(fused=True)``  — the device-resident path: the stream is
+  reshaped to ``[n_intervals, interval, ...]`` and the whole run executes
+  as a single ``jax.lax.scan`` inside one jitted call with the state
+  buffer donated.  Compute mode (pre-process + op registration) is
+  intrinsically interval-parallel, so it is vmapped over *all* intervals
+  up front; only state-access mode is sequential across punctuations.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .blotter import AppSpec, build_opbatch
-from .engines import EngineStats, evaluate
+from .engines import (CHAIN_SCHEMES, EngineStats, evaluate,
+                      tstream_scan_coefs_stream, tstream_scan_execute,
+                      tstream_scan_plan)
+from .restructure import restructure
 from .types import OpResults, StateStore
 
 
@@ -45,6 +60,9 @@ class DualModeEngine:
         self.cfg = cfg
         self.init_store = store
         self._step = jax.jit(partial(_step_impl, app=app, cfg=cfg))
+        self._fused = jax.jit(
+            partial(_fused_impl, app=app, cfg=cfg, store=store),
+            donate_argnums=0)
 
     def step(self, values: jnp.ndarray, events: Dict[str, jnp.ndarray],
              ts_base) -> Tuple[Dict, jnp.ndarray, EngineStats]:
@@ -52,15 +70,42 @@ class DualModeEngine:
         store = dataclasses.replace(self.init_store, values=values)
         return self._step(store, events, jnp.asarray(ts_base, jnp.int32))
 
-    def run_stream(self, values, event_stream, punct_interval: int):
-        """Drive a host-side event stream punctuation by punctuation."""
-        outs = []
-        ts = 0
-        for batch in _batches(event_stream, punct_interval):
-            out, values, stats = self.step(values, batch, ts)
-            ts += punct_interval
-            outs.append(out)
-        return outs, values
+    def run_stream(self, values, event_stream, punct_interval: int,
+                   fused: bool = True):
+        """Drive an event stream punctuation by punctuation.
+
+        ``fused=True`` (default) runs every interval inside one jitted
+        ``lax.scan`` with the state buffer donated — no per-interval host
+        round-trips.  ``fused=False`` is the host-side per-interval loop;
+        both produce identical outputs and final state.
+        """
+        if not fused:
+            outs = []
+            ts = 0
+            for batch in _batches(event_stream, punct_interval):
+                out, values, stats = self.step(values, batch, ts)
+                ts += punct_interval
+                outs.append(out)
+            return outs, values
+
+        n = len(next(iter(event_stream.values())))
+        n_intervals = n // punct_interval
+        if n_intervals == 0:
+            return [], values
+        batched = {}
+        for k, v in event_stream.items():
+            v = np.asarray(v)[: n_intervals * punct_interval]
+            batched[k] = jnp.asarray(
+                v.reshape((n_intervals, punct_interval) + v.shape[1:]))
+        # the jitted call donates its values argument (in-place carry on
+        # device); hand it a private copy so the caller's buffer survives
+        outs, values, _ = self._fused(jnp.array(values, copy=True), batched,
+                                      jnp.int32(0))
+        # one bulk D2H for the stacked outputs, then free numpy views —
+        # cheaper than dispatching n_intervals x n_outputs device slices
+        outs = jax.device_get(outs)
+        return ([jax.tree_util.tree_map(lambda x, i=i: x[i], outs)
+                 for i in range(n_intervals)], values)
 
 
 def _batches(stream: Dict[str, np.ndarray], interval: int):
@@ -69,42 +114,159 @@ def _batches(stream: Dict[str, np.ndarray], interval: int):
         yield {k: jnp.asarray(v[i : i + interval]) for k, v in stream.items()}
 
 
-def _step_impl(store: StateStore, events, ts_base, *, app: AppSpec,
-               cfg: EngineConfig):
-    # -- compute mode: pre-process + postpone state access (D1) ------------
-    ops, ebs = build_opbatch(app, store, events, ts_base)
-
-    # -- state access mode: dynamic restructuring execution (D2) -----------
+def _eval_interval(store: StateStore, ops, ebs, *, app: AppSpec,
+                   cfg: EngineConfig, prestructured=None):
+    """State-access mode for one interval: restructure exactly once,
+    evaluate, optionally re-pass with aborted txns masked (reusing the same
+    sort), then resume compute mode over the stored events."""
+    pres = prestructured
+    if pres is None and cfg.scheme in CHAIN_SCHEMES:
+        # the segmented-scan path reads only 4 sorted columns — skip the rest
+        light = (cfg.scheme in ("tstream", "tstream_scan")
+                 and app.associative_only)
+        pres = restructure(ops, store.pad_uid, rowmajor_ts=True, light=light)
     res, values, stats = evaluate(
         store, ops, app.funs, cfg.scheme,
         associative_only=app.associative_only, has_gates=app.has_gates,
         n_partitions=cfg.n_partitions, max_dep_levels=cfg.max_dep_levels,
-        use_pallas=cfg.use_pallas)
+        use_pallas=cfg.use_pallas, prestructured=pres)
 
+    batch = ops.n_ops // app.max_ops
     if cfg.abort_repass and app.may_abort:
         # Abort handling without rollback: a transaction whose ops failed is
         # masked out and the batch is re-evaluated from the pre-batch values.
         # (Addresses the paper's §IV-F multi-write rollback limitation.)
-        some = jax.tree_util.tree_leaves(events)[0]
-        batch = some.shape[0]
+        # Chain geometry only depends on uids, so the repass tightens the
+        # ``valid`` mask in both layouts instead of re-sorting.
         succ = res["success"].reshape(batch, app.max_ops)
         valid = ops.valid.reshape(batch, app.max_ops)
         txn_ok = jnp.all(succ | ~valid, axis=1)
         keep = jnp.repeat(txn_ok, app.max_ops)
         ops2 = dataclasses.replace(ops, valid=ops.valid & keep)
+        pres2 = None
+        if pres is not None:
+            sops, ch = pres
+            pres2 = (dataclasses.replace(sops,
+                                         valid=sops.valid & ch.take(keep)),
+                     ch)
         res, values, stats = evaluate(
             store, ops2, app.funs, cfg.scheme,
             associative_only=app.associative_only, has_gates=app.has_gates,
             n_partitions=cfg.n_partitions, max_dep_levels=cfg.max_dep_levels,
-            use_pallas=cfg.use_pallas)
+            use_pallas=cfg.use_pallas, prestructured=pres2)
 
-    # -- compute mode resumes: post-process stored events -------------------
-    some = jax.tree_util.tree_leaves(events)[0]
-    batch = some.shape[0]
+    out = _post_interval(res, ebs, app=app)
+    return out, values, stats
+
+
+def _post_interval(res, ebs, *, app: AppSpec):
+    """Compute mode resumes: post-process stored events.
+
+    Shared verbatim by both drivers so they stay bit-identical.  (Results
+    may carry kernel-padded lanes in the fused Pallas path — sliced here.)
+    """
+    batch = res["success"].shape[0] // app.max_ops
     shaped = OpResults(
-        pre=res["pre"].reshape(batch, app.max_ops, app.width),
-        post=res["post"].reshape(batch, app.max_ops, app.width),
+        pre=res["pre"].reshape(batch, app.max_ops, -1)[..., : app.width],
+        post=res["post"].reshape(batch, app.max_ops, -1)[..., : app.width],
         success=res["success"].reshape(batch, app.max_ops),
     )
-    out = jax.vmap(app.post_process)(ebs, shaped)
-    return out, values, stats
+    return jax.vmap(app.post_process)(ebs, shaped)
+
+
+def _step_impl(store: StateStore, events, ts_base, *, app: AppSpec,
+               cfg: EngineConfig):
+    # -- compute mode: pre-process + postpone state access (D1) ------------
+    ops, ebs = build_opbatch(app, store, events, ts_base)
+    # -- state access mode: dynamic restructuring execution (D2) -----------
+    return _eval_interval(store, ops, ebs, app=app, cfg=cfg)
+
+
+def _fused_impl(values, events_b, ts0, *, app: AppSpec, cfg: EngineConfig,
+                store: StateStore):
+    """Whole-stream driver: one jitted call, ``lax.scan`` over intervals.
+
+    ``events_b`` leaves are [n_intervals, interval, ...]; ``values`` is the
+    donated state buffer.  Everything values-independent — op registration,
+    the restructure sort, and (on the associative path) the coefficient
+    scans and commit gather maps — is hoisted out of the sequential scan
+    and batched over all intervals; the scan body carries only the
+    values-dependent evaluation.
+    """
+    some = jax.tree_util.tree_leaves(events_b)[0]
+    n_intervals, interval = some.shape[0], some.shape[1]
+    store = dataclasses.replace(store, values=values)
+
+    # compute mode for ALL intervals at once (interval-parallel)
+    ts_bases = ts0 + jnp.arange(n_intervals, dtype=jnp.int32) * interval
+    ops_all, ebs_all = jax.vmap(
+        lambda ev, tb: build_opbatch(app, store, ev, tb))(events_b, ts_bases)
+
+    assoc_fast = (cfg.scheme in ("tstream", "tstream_scan")
+                  and app.associative_only
+                  and not (cfg.abort_repass and app.may_abort))
+
+    # Pallas fast path: lane-pad operands & state to the kernel width ONCE
+    # per stream, so per-interval kernel dispatch does no lane padding.
+    padded = False
+    if cfg.use_pallas and assoc_fast:
+        from repro.kernels.segscan import kernel as K
+        if app.width < K.LANES:
+            lane_pad = K.LANES - app.width
+            ops_all = dataclasses.replace(
+                ops_all, operand=jnp.pad(
+                    ops_all.operand, ((0, 0), (0, 0), (0, lane_pad))))
+            store = dataclasses.replace(
+                store, values=jnp.pad(store.values, ((0, 0), (0, lane_pad))))
+            padded = True
+
+    if assoc_fast:
+        outs, values, stats = _fused_assoc(store, ops_all, ebs_all,
+                                           app=app, cfg=cfg)
+        if padded:
+            values = values[:, : app.width]
+        return outs, values, stats
+
+    # generic path: hoist the restructure sort for chain schemes; the scan
+    # body evaluates one interval from its prestructured batch
+    pres_all = None
+    if cfg.scheme in CHAIN_SCHEMES:
+        pres_all = jax.vmap(
+            lambda o: restructure(o, store.pad_uid, rowmajor_ts=True)
+        )(ops_all)
+
+    def body(values, xs):
+        ops, ebs, pres = xs
+        st = dataclasses.replace(store, values=values)
+        out, values, stats = _eval_interval(st, ops, ebs, app=app, cfg=cfg,
+                                            prestructured=pres)
+        return values, (out, stats)
+
+    values, (outs, stats) = jax.lax.scan(body, store.values,
+                                         (ops_all, ebs_all, pres_all))
+    return outs, values, stats
+
+
+def _fused_assoc(store: StateStore, ops_all, ebs_all, *, app: AppSpec,
+                 cfg: EngineConfig):
+    """Associative fast path: the scan body is O(N) gathers + elementwise.
+
+    Sort, coefficient scans and commit gather maps for ALL intervals run
+    batched before the scan; results return to flat layout and post-process
+    batched after it.
+    """
+    plan_all = jax.vmap(
+        lambda o: tstream_scan_plan(store, o, app.funs, rowmajor_ts=True)
+    )(ops_all)
+    plan_all = tstream_scan_coefs_stream(plan_all, use_pallas=cfg.use_pallas)
+
+    def body(values, xs):
+        plan, ebs = xs
+        res, new_values, stats = tstream_scan_execute(
+            values, plan, store.pad_uid)
+        out = _post_interval(res, ebs, app=app)
+        return new_values, (out, stats)
+
+    values, (outs, stats) = jax.lax.scan(body, store.values,
+                                         (plan_all, ebs_all))
+    return outs, values, stats

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from .engines import eval_tstream_scan
+from .restructure import restructure
 from .types import FunSpec, OpBatch, StateStore, make_store
 
 LAYOUTS = ("shared_nothing", "shared_per_socket", "shared_everything")
@@ -56,7 +57,9 @@ def evaluate_sharded(store: StateStore, ops: OpBatch,
 
     Returns values in the *original* slot order (un-permuted) for
     comparison; the layout governs where evaluation runs and which
-    collectives reconcile state.
+    collectives reconcile state.  Each shard body restructures its remapped
+    local batch exactly once and threads the sorted view into the engine
+    (``ops`` must come from ``build_opbatch`` — row order is (ts, slot)).
     """
     assert layout in LAYOUTS, layout
     # local stores merge tables into one slot range; per-slot max-type info
@@ -98,7 +101,10 @@ def evaluate_sharded(store: StateStore, ops: OpBatch,
             lstore = dataclasses.replace(
                 lstore, table_is_max=(any(store.table_is_max),),
                 table_base=(0,), table_capacity=(per,))
-            _, new_vals, _ = eval_tstream_scan(lstore, lops, funs)
+            _, new_vals, _ = eval_tstream_scan(
+                lstore, lops, funs,
+                prestructured=restructure(lops, lstore.pad_uid,
+                                          rowmajor_ts=True))
             return new_vals
 
         # values [s_pad+1] -> per-device blocks [per+1]: drop global pad row,
@@ -133,7 +139,10 @@ def evaluate_sharded(store: StateStore, ops: OpBatch,
             lstore = make_store([per], store.values.shape[1], init=vals)
             lstore = dataclasses.replace(
                 lstore, table_is_max=(any(store.table_is_max),))
-            _, new_vals, _ = eval_tstream_scan(lstore, lops, funs)
+            _, new_vals, _ = eval_tstream_scan(
+                lstore, lops, funs,
+                prestructured=restructure(lops, lstore.pad_uid,
+                                          rowmajor_ts=True))
             delta = new_vals - vals
             return vals + jax.lax.psum(delta, core_axis)  # intra-socket
 
@@ -159,7 +168,10 @@ def evaluate_sharded(store: StateStore, ops: OpBatch,
         lstore = make_store([s_pad], store.values.shape[1], init=vals)
         lstore = dataclasses.replace(
             lstore, table_is_max=(any(store.table_is_max),))
-        _, new_vals, _ = eval_tstream_scan(lstore, lops, funs)
+        _, new_vals, _ = eval_tstream_scan(
+            lstore, lops, funs,
+            prestructured=restructure(lops, lstore.pad_uid,
+                                      rowmajor_ts=True))
         delta = new_vals - vals
         return vals + jax.lax.psum(delta, axes)       # global merge
 

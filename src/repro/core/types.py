@@ -46,6 +46,11 @@ class FunSpec:
     apply: Callable[[jnp.ndarray, jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]]
     affine: Optional[Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]]] = None
     is_max: bool = False
+    # (a, b_is_operand) when the affine form is one of the three simple
+    # shapes identity (1, 0) / set (0, o) / add (1, o) — lets the engines
+    # build coefficients from a LUT instead of a vmapped switch.  None for
+    # general affine callables.
+    affine_simple: Optional[Tuple[float, bool]] = None
 
     @property
     def associative(self) -> bool:
@@ -78,10 +83,14 @@ def _f_take(pre, operand):
     return pre - jnp.where(ok, operand, jnp.zeros_like(operand)), ok
 
 
-F_NOP = FunSpec("nop", _f_nop, affine=lambda o: (jnp.ones_like(o), jnp.zeros_like(o)))
-F_READ = FunSpec("read", _f_read, affine=lambda o: (jnp.ones_like(o), jnp.zeros_like(o)))
-F_PUT = FunSpec("put", _f_put, affine=lambda o: (jnp.zeros_like(o), o))
-F_ADD = FunSpec("add", _f_add, affine=lambda o: (jnp.ones_like(o), o))
+F_NOP = FunSpec("nop", _f_nop, affine=lambda o: (jnp.ones_like(o), jnp.zeros_like(o)),
+                affine_simple=(1.0, False))
+F_READ = FunSpec("read", _f_read, affine=lambda o: (jnp.ones_like(o), jnp.zeros_like(o)),
+                 affine_simple=(1.0, False))
+F_PUT = FunSpec("put", _f_put, affine=lambda o: (jnp.zeros_like(o), o),
+                affine_simple=(0.0, True))
+F_ADD = FunSpec("add", _f_add, affine=lambda o: (jnp.ones_like(o), o),
+                affine_simple=(1.0, True))
 F_MAX = FunSpec("max", _f_max, is_max=True)
 F_TAKE = FunSpec("take", _f_take)  # conditional: lockstep path only
 

@@ -1,0 +1,157 @@
+"""Scan-fused device-resident streaming (DESIGN.md §2.4).
+
+Two contracts are pinned here:
+
+1. ``run_stream(fused=True)`` — the whole-stream ``lax.scan`` driver — is
+   *bit-identical* to the host-side per-interval loop: same per-interval
+   outputs, same final state, for every app and every consistency-
+   preserving scheme, including the abort-repass and Pallas paths.
+2. The O(N log N) ``restructure`` lexsort runs exactly **once** per
+   evaluated batch on every chain-based path (tstream scan/lockstep, mvlk,
+   and the scheduler's abort repass, which must reuse the existing sort).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import ALL_APPS
+from repro.core import engines as engines_mod
+from repro.core import scheduler as scheduler_mod
+from repro.core.blotter import build_opbatch
+from repro.core.restructure import restructure
+from repro.core.scheduler import DualModeEngine, EngineConfig, _step_impl
+
+SCHEMES = ["tstream", "lock", "mvlk"]
+
+
+def _run_both(app, cfg, n_events=48, interval=16, seed=11, mutate=None):
+    rng = np.random.default_rng(seed)
+    stream = app.gen_events(rng, n_events)
+    if mutate:
+        mutate(stream)
+    store = app.make_store()
+    eng = DualModeEngine(app, store, cfg)
+    outs_f, vals_f = eng.run_stream(store.values, stream, interval,
+                                    fused=True)
+    outs_u, vals_u = eng.run_stream(store.values, stream, interval,
+                                    fused=False)
+    return (outs_f, vals_f), (outs_u, vals_u)
+
+
+def _assert_identical(fused, unfused):
+    (outs_f, vals_f), (outs_u, vals_u) = fused, unfused
+    np.testing.assert_array_equal(np.asarray(vals_f), np.asarray(vals_u))
+    assert len(outs_f) == len(outs_u) > 1
+    for of, ou in zip(outs_f, outs_u):
+        assert set(of) == set(ou)
+        for k in of:
+            np.testing.assert_array_equal(np.asarray(of[k]),
+                                          np.asarray(ou[k]), err_msg=k)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("app_name", list(ALL_APPS))
+def test_fused_matches_unfused_bitwise(app_name, scheme):
+    app = ALL_APPS[app_name]
+    fused, unfused = _run_both(app, EngineConfig(scheme=scheme))
+    _assert_identical(fused, unfused)
+
+
+def test_fused_matches_unfused_abort_repass():
+    """The fused driver's repass masks ``valid`` in the *existing* sorted
+    layout; results must still match the loop driver bit for bit."""
+    app = ALL_APPS["sl"]
+    cfg = EngineConfig(scheme="tstream", abort_repass=True)
+
+    def overdraw(stream):  # most transfers fail -> repass actually masks
+        stream["amount"] = (stream["amount"] * 100).astype(np.float32)
+
+    fused, unfused = _run_both(app, cfg, seed=3, mutate=overdraw)
+    _assert_identical(fused, unfused)
+
+
+def test_fused_pallas_lane_prepad_matches():
+    """use_pallas under the fused driver lane-pads once per stream; results
+    must equal the per-interval Pallas path and the pure-jnp reference."""
+    app = ALL_APPS["gs"]
+    fused_p, unfused_p = _run_both(
+        app, EngineConfig(scheme="tstream", use_pallas=True),
+        n_events=32, interval=16)
+    _assert_identical(fused_p, unfused_p)
+    fused_ref, _ = _run_both(app, EngineConfig(scheme="tstream"),
+                             n_events=32, interval=16)
+    np.testing.assert_allclose(np.asarray(fused_p[1]),
+                               np.asarray(fused_ref[1]), rtol=1e-6, atol=1e-6)
+
+
+def test_fused_empty_and_tail_truncation():
+    """Streams shorter than one interval yield no outputs; tails beyond the
+    last full interval are dropped — same as the loop driver."""
+    app = ALL_APPS["gs"]
+    rng = np.random.default_rng(0)
+    store = app.make_store()
+    eng = DualModeEngine(app, store, EngineConfig())
+    short = app.gen_events(rng, 7)
+    outs, vals = eng.run_stream(store.values, short, 16, fused=True)
+    assert outs == []
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(store.values))
+    ragged = app.gen_events(rng, 40)  # 2 full intervals of 16 + tail of 8
+    fused = eng.run_stream(store.values, ragged, 16, fused=True)
+    unfused = eng.run_stream(store.values, ragged, 16, fused=False)
+    assert len(fused[0]) == len(unfused[0]) == 2
+    _assert_identical(fused, unfused)
+
+
+# ---------------------------------------------------------------------------
+# restructure call-count regression: the lexsort must run once per batch
+# ---------------------------------------------------------------------------
+class _CountingRestructure:
+    def __init__(self):
+        self.calls = 0
+
+    def __call__(self, ops, pad_uid, **kw):
+        self.calls += 1
+        return restructure(ops, pad_uid, **kw)
+
+
+@pytest.fixture
+def count_restructure(monkeypatch):
+    counter = _CountingRestructure()
+    # both modules bound the name at import time; patch each binding
+    monkeypatch.setattr(engines_mod, "restructure", counter)
+    monkeypatch.setattr(scheduler_mod, "restructure", counter)
+    return counter
+
+
+def _ops_for(app, n_events=24, seed=0):
+    rng = np.random.default_rng(seed)
+    store = app.make_store()
+    events = {k: jnp.asarray(v)
+              for k, v in app.gen_events(rng, n_events).items()}
+    ops, _ = build_opbatch(app, store, events, jnp.int32(0))
+    return store, ops, events
+
+
+@pytest.mark.parametrize("scheme,app_name", [
+    ("tstream", "gs"),    # segscan fast path
+    ("tstream", "sl"),    # lockstep path (gates)
+    ("tstream", "ob"),    # lockstep path (non-associative)
+    ("mvlk", "sl"),       # mvlk must NOT re-sort inside lockstep
+    ("mvlk", "gs"),
+])
+def test_restructure_runs_once_per_batch(count_restructure, scheme, app_name):
+    app = ALL_APPS[app_name]
+    store, ops, _ = _ops_for(app)
+    engines_mod.evaluate(store, ops, app.funs, scheme,
+                         associative_only=app.associative_only,
+                         has_gates=app.has_gates)
+    assert count_restructure.calls == 1
+
+
+def test_restructure_runs_once_with_abort_repass(count_restructure):
+    """The repass re-evaluates the identical batch: it must reuse the sort."""
+    app = ALL_APPS["sl"]
+    store, _, events = _ops_for(app, n_events=16, seed=3)
+    cfg = EngineConfig(scheme="tstream", abort_repass=True)
+    _step_impl(store, events, jnp.int32(0), app=app, cfg=cfg)
+    assert count_restructure.calls == 1
