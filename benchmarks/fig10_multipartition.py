@@ -1,5 +1,15 @@
-"""Fig. 10 analogue: PAT vs TStream under multi-partition transactions (GS)."""
+"""Fig. 10 analogue: PAT vs TStream under multi-partition transactions (GS).
+
+Two views: the modeled single-device PAT-vs-TStream comparison (paper
+figure), plus **measured** fused sharded streaming rows across the same
+mp_ratio/mp_len grid on an 8-device shared-nothing mesh (subprocess
+worker; exchange drops accounted per row)."""
 from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
 
 import jax.numpy as jnp
 import numpy as np
@@ -9,6 +19,15 @@ from repro.apps import ALL_APPS
 from .common import throughput_model
 
 WIDTH = 40
+
+
+def _sharded_rows(quick: bool):
+    worker = os.path.join(os.path.dirname(__file__), "fig10_worker.py")
+    cmd = [sys.executable, worker] + ([] if quick else ["--full"])
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=1800)
+    if proc.returncode != 0:
+        return [dict(fig="fig10", error=proc.stderr[-500:])]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
 def run(quick: bool = True):
@@ -42,4 +61,5 @@ def run(quick: bool = True):
                              mp_len=mp_len,
                              events_per_s=d["by_width"][WIDTH],
                              rounds=d["rounds"]))
+    rows.extend(_sharded_rows(quick))
     return rows

@@ -21,5 +21,10 @@ def run(quick: bool = True):
     for layout, d in data.items():
         rows.append(dict(fig="fig14", app="gs", layout=layout,
                          correct=d["correct"], wall_s=d["wall_s"],
-                         wire_bytes_per_device=d["wire_bytes_per_device"]))
+                         wire_bytes_per_device=d["wire_bytes_per_device"],
+                         fused_bit_identical=d["fused_bit_identical"],
+                         fused_wall_s=d["fused_wall_s"],
+                         fused_events_per_s=d["fused_events_per_s"],
+                         fused_dropped=d["fused_dropped"],
+                         fused_exchange_capacity=d["fused_exchange_capacity"]))
     return rows

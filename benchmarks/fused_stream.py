@@ -20,11 +20,15 @@ from .common import stream_wall_time_pair
 def _cases(quick: bool, smoke: bool):
     if smoke:   # CI bit-rot canary: seconds, not minutes
         return [("gs", "tstream", 64, 4)]
-    if quick:
+    if quick:   # the app x interval grid (all four apps; both hot paths)
         return [
             ("gs", "tstream", 512, 32),   # acceptance case
             ("gs", "tstream", 128, 64),
             ("tp", "tstream", 512, 32),
+            ("tp", "tstream", 128, 64),
+            ("sl", "tstream", 256, 16),   # gated lockstep path
+            ("sl", "tstream", 128, 32),
+            ("ob", "tstream", 128, 16),   # non-associative lockstep path
             ("gs", "mvlk", 256, 8),
         ]
     return [(a, s, i, 32) for a in ALL_APPS for s in ("tstream", "mvlk")

@@ -29,12 +29,13 @@ def main() -> None:
 
     from . import (fig8_throughput, fig9_breakdown, fig10_multipartition,
                    fig11_workload, fig12_interval, fig13_latency,
-                   fig14_numa, fused_stream, roofline)
+                   fig14_numa, fused_stream, roofline, sharded_stream)
     modules = dict(fig8=fig8_throughput, fig9=fig9_breakdown,
                    fig10=fig10_multipartition, fig11=fig11_workload,
                    fig12=fig12_interval, fig13=fig13_latency,
                    fig14=fig14_numa, roofline=roofline,
-                   fused_stream=fused_stream)
+                   fused_stream=fused_stream,
+                   sharded_stream=sharded_stream)
     only = set(args.only.split(",")) if args.only else set(modules)
 
     os.makedirs("results/bench", exist_ok=True)
@@ -60,10 +61,10 @@ def main() -> None:
                                    r.get("total_s",
                                          r.get("p99_latency_s", 0.0))))) * 1e6
             key = "/".join(str(r[k]) for k in
-                           ("fig", "app", "scheme", "layout", "arch",
-                            "shape", "width", "interval", "mp_ratio",
-                            "mp_len", "read_ratio", "theta", "mesh",
-                            "fused")
+                           ("fig", "app", "scheme", "layout", "driver",
+                            "arch", "shape", "width", "interval",
+                            "mp_ratio", "mp_len", "read_ratio", "theta",
+                            "mesh", "n_dev", "fused")
                            if k in r)
             derived = r.get("events_per_s",
                             r.get("roofline_frac",

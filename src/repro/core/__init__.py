@@ -5,6 +5,7 @@ restructuring execution (D2) — implemented as data-parallel JAX.
 """
 from .blotter import AppSpec, Blotter, build_opbatch
 from .engines import SCHEMES, EngineStats, evaluate
+from .ownership import LAYOUTS, Ownership, build_ownership, make_local_store
 from .restructure import Chains, restructure
 from .scheduler import DualModeEngine, EngineConfig
 from .types import (CORE_FUNS, F_ADD, F_MAX, F_NOP, F_PUT, F_READ, F_TAKE,

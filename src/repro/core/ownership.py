@@ -1,0 +1,274 @@
+"""Ownership, local stores, and the owner-routed op exchange (DESIGN.md §2.5).
+
+The chain-shard layouts (the paper's NUMA-aware processing configurations,
+§IV-E) all start from the same primitive: an **ownership permutation** of
+the state store.  ``owner(uid) = uid % n_owners`` balances hot keys across
+shards; permuting slots so each owner's slots become one *contiguous*
+block turns "route to owner" into integer division and lets a device hold
+its shard as a dense ``[per+1, W]`` value block (``+1`` local padding
+chain).  The permutation is computed **once** per engine, not per batch.
+
+On top of it sit two op-distribution strategies:
+
+* replicate-everything (``core/sharded.py``, the pre-exchange baseline):
+  every device receives the full OpBatch and masks out non-local ops —
+  O(n_dev · N) replicated bytes per batch.
+* owner-routed exchange (``core/sharded_stream.py``): each device buckets
+  the ops *it built* by destination owner using the packed-uint32
+  single-operand sort from ``restructure.py``, pads buckets to a fixed
+  capacity, and ships them with ONE ``all_to_all`` — O(N + padding) bytes.
+  Bucket overflow drops ops; drops are **counted and surfaced**, never
+  silent (``bucket_by_owner``).
+
+``make_local_store`` is the one place local (per-shard) stores are
+constructed, with all fields — ``table_base``/``table_capacity``/
+``table_is_max``/``slot_is_max`` — set consistently for every layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .restructure import packed_sort_fits, packed_stable_sort
+from .types import StateStore
+
+LAYOUTS = ("shared_nothing", "shared_per_socket", "shared_everything")
+
+
+@dataclasses.dataclass(frozen=True)
+class Ownership:
+    """Ownership permutation of a state store over ``n_owners`` shards.
+
+    ``fwd``  : i32[S+1], original uid -> permuted uid (pad -> s_pad)
+    ``per``  : slots per owner; owner o holds permuted uids
+               [o*per, (o+1)*per)
+    ``s_pad``: n_owners * per (>= S; trailing slots are dead padding)
+    ``slot_is_max``: bool[s_pad+1] per *permuted* slot, or None when the
+    store has no max-type tables.
+    """
+
+    n_owners: int
+    per: int
+    s_pad: int
+    fwd: jnp.ndarray
+    slot_is_max: Optional[jnp.ndarray]
+
+
+def build_ownership(store: StateStore, n_owners: int) -> Ownership:
+    s = store.n_slots
+    n_owners = max(int(n_owners), 1)
+    per = -(-s // n_owners)
+    s_pad = per * n_owners
+    old = jnp.arange(s)
+    new = ((old % n_owners) * per + old // n_owners).astype(jnp.int32)
+    fwd = jnp.full((s + 1,), s_pad, jnp.int32).at[old].set(new)
+    sim = None
+    if any(store.table_is_max):
+        flags = store.uid_is_max()  # [S+1]
+        sim = jnp.zeros((s_pad + 1,), bool).at[new].set(flags[:-1])
+    return Ownership(n_owners=n_owners, per=per, s_pad=s_pad, fwd=fwd,
+                     slot_is_max=sim)
+
+
+def permute_values(own: Ownership, values: jnp.ndarray) -> jnp.ndarray:
+    """[S+1, W] original -> [s_pad+1, W] ownership layout (pad rows zero)."""
+    out = jnp.zeros((own.s_pad + 1, values.shape[1]), values.dtype)
+    return out.at[own.fwd[:-1]].set(values[:-1])
+
+
+def unpermute_values(own: Ownership, values_pad: jnp.ndarray) -> jnp.ndarray:
+    """[s_pad+1, W] ownership layout -> [S+1, W] original (pad row zero)."""
+    s = own.fwd.shape[0] - 1
+    out = jnp.zeros((s + 1, values_pad.shape[1]), values_pad.dtype)
+    return out.at[:-1].set(jnp.take(values_pad, own.fwd[:-1], axis=0))
+
+
+def make_local_store(values: jnp.ndarray,
+                     slot_is_max: Optional[jnp.ndarray] = None) -> StateStore:
+    """The ONE constructor for per-shard local stores.
+
+    ``values`` is the shard's ``[n_local+1, W]`` block (last row = local
+    padding chain); ``slot_is_max`` its per-slot max flags (ownership
+    layout interleaves tables, so flags are per-slot, not per-table).
+    Every layout gets identical table metadata: one merged table based at
+    0 with the full local capacity.
+    """
+    n_local = values.shape[0] - 1
+    return StateStore(
+        values=values, table_base=(0,), table_capacity=(n_local,),
+        table_is_max=(slot_is_max is not None,), slot_is_max=slot_is_max)
+
+
+# ---------------------------------------------------------------------------
+# Owner-routed exchange: capacity-padded count/sort bucketing
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RoutePlan:
+    """Per-batch bucketing of local ops by destination shard.
+
+    ``take``    : i32[n_route, cap] local row feeding each bucket cell
+    ``ok``      : bool[n_route, cap] cell holds a real (shipped) op
+    ``rank``    : i32[N] each local row's cell within its bucket (>= cap
+                  when the row overflowed and was dropped)
+    ``dst``     : i32[N] destination bucket (n_route for unrouted padding)
+    ``dropped`` : i32 scalar, valid ops lost to bucket overflow — the
+                  exchange's accuracy/traffic trade-off, surfaced to the
+                  driver's stats rather than silently discarded
+    """
+
+    take: jnp.ndarray
+    ok: jnp.ndarray
+    rank: jnp.ndarray
+    dst: jnp.ndarray
+    dropped: jnp.ndarray
+
+
+def bucket_by_owner(dst: jnp.ndarray, n_route: int, cap: int) -> RoutePlan:
+    """Bucket local rows by ``dst`` (i32[N] in [0, n_route]; ``n_route``
+    marks rows that are never shipped, e.g. padding ops).
+
+    Reuses the packed-uint32 single-operand sort: one ``jnp.sort`` of
+    ``dst << idx_bits | row`` keys yields the stable bucket grouping, and
+    bucket extraction is pure gathers (no scatters in the hot path).
+    """
+    n = dst.shape[0]
+    assert packed_sort_fits(n, n_route), (n, n_route)
+    order, _, pos = packed_stable_sort(dst, n_route)
+    counts = jax.ops.segment_sum(jnp.ones((n,), jnp.int32), dst,
+                                 num_segments=n_route + 1)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])  # [n_route+1]
+    rank = pos - jnp.take(starts, dst)
+    j = starts[:n_route, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
+    ok = (jnp.arange(cap, dtype=jnp.int32)[None, :]
+          < jnp.minimum(counts[:n_route], cap)[:, None])
+    take = jnp.where(ok, jnp.take(order, jnp.minimum(j, n - 1)), 0)
+    dropped = jnp.sum(jnp.maximum(counts[:n_route] - cap, 0))
+    return RoutePlan(take=take, ok=ok, rank=rank, dst=dst, dropped=dropped)
+
+
+def route_gather(plan: RoutePlan, field: jnp.ndarray, pad_value):
+    """Gather a per-row field into its [n_route, cap, ...] bucket layout."""
+    out = jnp.take(field, plan.take, axis=0)
+    ok = plan.ok
+    while ok.ndim < out.ndim:
+        ok = ok[..., None]
+    return jnp.where(ok, out, jnp.asarray(pad_value, field.dtype))
+
+
+def unroute_gather(plan: RoutePlan, bucketed: jnp.ndarray, n_route: int,
+                   cap: int, pad_value=0):
+    """Inverse of ``route_gather`` for *returned* per-op results.
+
+    ``bucketed``: [n_route*cap, ...] results laid out by (bucket, cell) —
+    exactly how the reverse all_to_all deposits them.  Rows that were
+    dropped (overflow) or never shipped get ``pad_value``.
+    """
+    ok = (plan.dst < n_route) & (plan.rank < cap)
+    pos = (jnp.minimum(plan.dst, n_route - 1) * cap
+           + jnp.minimum(plan.rank, cap - 1))
+    out = jnp.take(bucketed, pos, axis=0)
+    okx = ok
+    while okx.ndim < out.ndim:
+        okx = okx[..., None]
+    return jnp.where(okx, out, jnp.asarray(pad_value, bucketed.dtype))
+
+
+def exchange_capacity(n_local_ops: int, n_route: int, slack: float) -> int:
+    """Bucket capacity: ``slack``× the balanced share, clamped to the
+    worst case (all local ops to one owner).  slack >= n_route therefore
+    guarantees zero drops at replicate-everything cost; the default
+    (2.0) bounds exchange bytes at 2·N while absorbing moderate skew —
+    the ownership permutation already stripes Zipf-hot keys round-robin
+    across shards, so per-owner counts concentrate near N/n_route.
+    """
+    per_route = -(-n_local_ops // max(n_route, 1))
+    cap = int(np.ceil(per_route * max(slack, 1.0)))
+    return max(1, min(cap, n_local_ops))
+
+
+def chunk_shard_output(x: jnp.ndarray, idx, n_rep: int) -> jnp.ndarray:
+    """Fully shard a *replicated* shard_map output along a mesh axis.
+
+    A shard_map output whose spec leaves a mesh axis unmentioned (because
+    the value is replicated across it) is treated as an unreduced partial
+    by the surrounding SPMD program and can get **summed** across the
+    identical copies when resharded.  The reliable pattern is to mention
+    every axis: each of the ``n_rep`` replicas returns a disjoint row
+    chunk of the (padded) value, and the caller reassembles with
+    ``unchunk_output``.  ``idx`` is this device's index along the
+    replicated axis (traced).
+    """
+    rows = x.shape[0]
+    chunk = -(-rows // n_rep)
+    xp = jnp.pad(x, ((0, chunk * n_rep - rows),) + ((0, 0),) * (x.ndim - 1))
+    return jax.lax.dynamic_slice_in_dim(xp, idx * chunk, chunk)
+
+
+def unchunk_output(x_global: jnp.ndarray, n_groups: int,
+                   rows: int) -> jnp.ndarray:
+    """Inverse of ``chunk_shard_output`` over ``n_groups`` groups whose
+    chunks concatenate along axis 0; returns [n_groups, rows, ...]."""
+    g = x_global.reshape((n_groups, -1) + x_global.shape[1:])
+    return g[:, :rows]
+
+
+# ---------------------------------------------------------------------------
+# Flag-gated hash-probe owner lookup (kernels/hash_probe in the hot path)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ProbeRoute:
+    """uid -> destination shard via the bucketed hash-probe kernel.
+
+    The direct-addressed stores make owner lookup a gather; sparse-key
+    deployments resolve uid through a hash probe instead.  This wires
+    ``kernels/hash_probe`` into the routing hot path (flag-gated via
+    ``EngineConfig.use_hash_probe_route``): probe uid -> table slot, then
+    read the owner recorded at insertion time.  ``ref``-checked against
+    the arange table in tests.
+    """
+
+    table_lo: jnp.ndarray
+    table_hi: jnp.ndarray
+    slot_owner: jnp.ndarray  # i32[n_buckets*ASSOC], -1-safe via end slot
+
+    def owners_of(self, uid: jnp.ndarray) -> jnp.ndarray:
+        from repro.kernels.hash_probe.ops import hash_probe
+
+        slot = hash_probe(uid, self.table_lo, self.table_hi)
+        # absent keys (slot -1) -> sentinel owner slot (maps to n_route)
+        return jnp.take(self.slot_owner, jnp.where(slot < 0,
+                                                   self.slot_owner.shape[0] - 1,
+                                                   slot))
+
+
+def build_probe_route(n_uids: int, owner_of_uid: np.ndarray,
+                      miss_owner: int) -> ProbeRoute:
+    """Insert uids 0..n_uids-1; record each uid's owner at its slot."""
+    from repro.kernels.hash_probe.ref import bucket_of_np, build_table
+    from repro.kernels.hash_probe.kernel import ASSOC, MAX_PROBES
+
+    keys = np.arange(n_uids, dtype=np.int32)
+    n_buckets = max(64, 2 * (-(-n_uids // ASSOC)))
+    lo, hi = build_table(keys, n_buckets)
+    # replay insertion to learn each key's slot
+    table = np.full((n_buckets, ASSOC), -1, np.int64)
+    slot_owner = np.full((n_buckets * ASSOC + 1,), miss_owner, np.int32)
+    for k in keys.astype(np.int64):
+        b = int(bucket_of_np(np.asarray(k), n_buckets))
+        for p in range(MAX_PROBES):
+            row = (b + p) % n_buckets
+            free = np.flatnonzero(table[row] < 0)
+            if len(free):
+                table[row, free[0]] = k
+                slot_owner[row * ASSOC + free[0]] = owner_of_uid[k]
+                break
+        else:  # pragma: no cover - build_table already raised
+            raise RuntimeError("hash table overflow")
+    return ProbeRoute(table_lo=jnp.asarray(lo), table_hi=jnp.asarray(hi),
+                      slot_owner=jnp.asarray(slot_owner))

@@ -53,6 +53,41 @@ class Chains:
         return jnp.take(x_sorted, self.inv, axis=0)
 
 
+def packed_sort_fits(n_rows: int, max_major: int) -> bool:
+    """Whether (major, row-index) packs into one uint32 sort key."""
+    idx_bits = max(n_rows - 1, 1).bit_length()
+    major_bits = max(int(max_major), 1).bit_length()
+    return idx_bits + major_bits <= 32
+
+
+def packed_stable_sort(major: jnp.ndarray, max_major: int):
+    """Stable sort of rows by an integer major key via ONE single-operand
+    sort of ``major << idx_bits | index`` packed uint32 keys (~6x faster
+    than a multi-key lexsort on CPU XLA; DESIGN.md §2.1).
+
+    ``major`` must lie in [0, max_major] and
+    ``packed_sort_fits(n, max_major)`` must hold.  Returns
+    ``(order, major_sorted, pos)`` with ``order`` the sorted->original
+    gather map and ``pos`` the inverse permutation (original row ->
+    sorted position, via vectorized binary search instead of a scatter).
+
+    Shared by chain restructuring (major = state uid) and the owner-routed
+    exchange (major = destination shard).
+    """
+    n = major.shape[0]
+    idx_bits = max(n - 1, 1).bit_length()
+    idx = jnp.arange(n, dtype=jnp.int32)
+    shift = jnp.uint32(1 << idx_bits)
+    packed = major.astype(jnp.uint32) * shift + idx.astype(jnp.uint32)
+    keys = jnp.sort(packed)
+    order = (keys & jnp.uint32((1 << idx_bits) - 1)).astype(jnp.int32)
+    major_s = (keys // shift).astype(jnp.int32)
+    # keys are unique, so each row's sorted position == binary search
+    pos = jnp.searchsorted(keys, packed,
+                           method="scan_unrolled").astype(jnp.int32)
+    return order, major_s, pos
+
+
 def restructure(ops: OpBatch, pad_uid: int, *,
                 rowmajor_ts: bool = False,
                 light: bool = False) -> Tuple[OpBatch, Chains]:
@@ -78,21 +113,11 @@ def restructure(ops: OpBatch, pad_uid: int, *,
     """
     uid = jnp.where(ops.valid, ops.uid, pad_uid)
     n = uid.shape[0]
-    idx_bits = max(n - 1, 1).bit_length()
-    uid_bits = max(int(pad_uid), 1).bit_length()
-    packed_ok = rowmajor_ts and (idx_bits + uid_bits) <= 32
+    packed_ok = rowmajor_ts and packed_sort_fits(n, pad_uid)
 
     idx = jnp.arange(n, dtype=jnp.int32)
     if packed_ok:
-        shift = jnp.uint32(1 << idx_bits)
-        keys = jnp.sort(uid.astype(jnp.uint32) * shift
-                        + idx.astype(jnp.uint32))
-        order = (keys & jnp.uint32((1 << idx_bits) - 1)).astype(jnp.int32)
-        uid_s = (keys // shift).astype(jnp.int32)
-        # inverse permutation: keys are unique, so position == binary search
-        inv = jnp.searchsorted(keys, uid.astype(jnp.uint32) * shift
-                               + idx.astype(jnp.uint32),
-                               method="scan_unrolled").astype(jnp.int32)
+        order, uid_s, inv = packed_stable_sort(uid, pad_uid)
     else:
         order = jnp.lexsort((ops.slot, ops.ts, uid))  # uid major, ts, slot
         uid_s = jnp.take(uid, order)
@@ -154,20 +179,29 @@ def segmented_scan_affine(a: jnp.ndarray, b: jnp.ndarray,
     Returns per-op (A, B) such that the state seen by op i within its chain is
     A_i * v0 + B_i (exclusive) — the paper's multiversion value at ts_i.
 
-    Pure-jnp reference path; the Pallas kernel in ``repro.kernels.segscan``
-    implements the same contract for the TPU target.
+    Implemented as an explicit log-step Hillis–Steele sweep with
+    segment-flag blocking (the same scheme the Pallas kernel uses inside a
+    block).  Unlike ``lax.associative_scan`` — whose combine tree depends
+    on an element's *global* array offset — the association here is fixed
+    by each op's position **within its segment**, so a chain produces
+    bit-identical results wherever it sits in the array.  The sharded
+    fused driver relies on this: the same chain lands at different offsets
+    on different devices and must still match the single-device schedule
+    bit for bit (DESIGN.md §2.5).
     """
-    flag = seg_start
-
-    def combine(x, y):
-        f1, a1, b1 = x
-        f2, a2, b2 = y
-        f2e = f2[..., None]
-        a = jnp.where(f2e, a2, a2 * a1)
-        b = jnp.where(f2e, b2, a2 * b1 + b2)
-        return (f1 | f2, a, b)
-
-    _, a_inc, b_inc = jax.lax.associative_scan(combine, (flag, a, b))
+    n = a.shape[0]
+    f = seg_start
+    a_inc, b_inc = a, b
+    d = 1
+    while d < n:
+        ap = jnp.concatenate([jnp.ones_like(a_inc[:d]), a_inc[:-d]], axis=0)
+        bp = jnp.concatenate([jnp.zeros_like(b_inc[:d]), b_inc[:-d]], axis=0)
+        fp = jnp.concatenate([jnp.ones((d,), bool), f[:-d]])
+        blocked = f[:, None]
+        a_inc, b_inc = (jnp.where(blocked, a_inc, a_inc * ap),
+                        jnp.where(blocked, b_inc, a_inc * bp + b_inc))
+        f = f | fp
+        d *= 2
     if not exclusive:
         return a_inc, b_inc
     # shift right within segments: identity at segment starts.
@@ -182,16 +216,23 @@ def segmented_scan_affine(a: jnp.ndarray, b: jnp.ndarray,
 
 def segmented_scan_max(m: jnp.ndarray, seg_start: jnp.ndarray,
                        exclusive: bool = True) -> jnp.ndarray:
-    """Segmented running max (for max-type tables, e.g. LPC sketches)."""
+    """Segmented running max (for max-type tables, e.g. LPC sketches).
+
+    Same segment-relative Hillis–Steele sweep as the affine scan (max is
+    order-insensitive, but the uniform structure keeps the two paths'
+    round counts identical).
+    """
     neg = jnp.full_like(m, -jnp.inf)
-    flag = seg_start
-
-    def combine(x, y):
-        f1, m1 = x
-        f2, m2 = y
-        return (f1 | f2, jnp.where(f2[..., None], m2, jnp.maximum(m1, m2)))
-
-    _, m_inc = jax.lax.associative_scan(combine, (flag, m))
+    n = m.shape[0]
+    f = seg_start
+    m_inc = m
+    d = 1
+    while d < n:
+        mp = jnp.concatenate([neg[:d], m_inc[:-d]], axis=0)
+        fp = jnp.concatenate([jnp.ones((d,), bool), f[:-d]])
+        m_inc = jnp.where(f[:, None], m_inc, jnp.maximum(m_inc, mp))
+        f = f | fp
+        d *= 2
     if not exclusive:
         return m_inc
     m_exc = jnp.concatenate([neg[:1], m_inc[:-1]], axis=0)

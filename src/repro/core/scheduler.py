@@ -49,13 +49,24 @@ class EngineConfig:
     max_dep_levels: int = 3
     use_pallas: bool = False
     abort_repass: bool = False   # re-run with aborted txns masked (§IV-C2)
+    # sharded streaming: resolve uid -> owner through the hash-probe
+    # kernel instead of the direct-addressed gather (DESIGN.md §2.5)
+    use_hash_probe_route: bool = False
 
 
 class DualModeEngine:
-    """The TStream engine bound to one application."""
+    """The TStream engine bound to one application.
+
+    With ``mesh``/``layout`` the engine becomes device-parallel: the
+    ownership permutation and routing tables are built once here, and
+    ``run_stream`` dispatches the whole stream as one sharded fused
+    program (``core/sharded_stream``).
+    """
 
     def __init__(self, app: AppSpec, store: StateStore,
-                 cfg: EngineConfig = EngineConfig()):
+                 cfg: EngineConfig = EngineConfig(), *,
+                 mesh=None, layout: str = "shared_nothing",
+                 exchange_slack: float = 2.0):
         self.app = app
         self.cfg = cfg
         self.init_store = store
@@ -63,12 +74,24 @@ class DualModeEngine:
         self._fused = jax.jit(
             partial(_fused_impl, app=app, cfg=cfg, store=store),
             donate_argnums=0)
+        # THE output program: all drivers post-process through this one
+        # jitted function on identical shapes (see _post_stream)
+        self._post = jax.jit(partial(_post_stream, app=app))
+        self._sharded = None
+        if mesh is not None:
+            from .sharded_stream import ShardedStream
+            self._sharded = ShardedStream(app, store, cfg, mesh, layout,
+                                          exchange_slack=exchange_slack)
 
     def step(self, values: jnp.ndarray, events: Dict[str, jnp.ndarray],
              ts_base) -> Tuple[Dict, jnp.ndarray, EngineStats]:
         """Process one punctuation interval. Returns (outputs, values', stats)."""
         store = dataclasses.replace(self.init_store, values=values)
-        return self._step(store, events, jnp.asarray(ts_base, jnp.int32))
+        res, ebs, values, stats = self._step(store, events,
+                                             jnp.asarray(ts_base, jnp.int32))
+        lift = jax.tree_util.tree_map(lambda x: x[None], (res, ebs))
+        outs = self._post(*lift)
+        return jax.tree_util.tree_map(lambda x: x[0], outs), values, stats
 
     def run_stream(self, values, event_stream, punct_interval: int,
                    fused: bool = True):
@@ -78,15 +101,33 @@ class DualModeEngine:
         ``lax.scan`` with the state buffer donated — no per-interval host
         round-trips.  ``fused=False`` is the host-side per-interval loop;
         both produce identical outputs and final state.
+
+        Engines built with a ``mesh`` run the sharded fused driver
+        (fused-only); exchange statistics land in
+        ``self.last_exchange_stats`` and overflow drops are logged.
         """
+        if self._sharded is not None:
+            assert fused, "sharded run_stream has no unfused host loop"
+            outs, values = self._sharded.run_stream(values, event_stream,
+                                                    punct_interval)
+            self.last_exchange_stats = self._sharded.last_stats
+            return outs, values
         if not fused:
-            outs = []
+            res_l, ebs_l = [], []
             ts = 0
             for batch in _batches(event_stream, punct_interval):
-                out, values, stats = self.step(values, batch, ts)
+                store = dataclasses.replace(self.init_store, values=values)
+                res, ebs, values, stats = self._step(store, batch,
+                                                     jnp.int32(ts))
                 ts += punct_interval
-                outs.append(out)
-            return outs, values
+                res_l.append(res)
+                ebs_l.append(ebs)
+            if not res_l:
+                return [], values
+            stack = lambda *xs: jnp.stack(xs)
+            res_all = jax.tree_util.tree_map(stack, *res_l)
+            ebs_all = jax.tree_util.tree_map(stack, *ebs_l)
+            return self._outs(res_all, ebs_all, len(res_l)), values
 
         n = len(next(iter(event_stream.values())))
         n_intervals = n // punct_interval
@@ -99,13 +140,15 @@ class DualModeEngine:
                 v.reshape((n_intervals, punct_interval) + v.shape[1:]))
         # the jitted call donates its values argument (in-place carry on
         # device); hand it a private copy so the caller's buffer survives
-        outs, values, _ = self._fused(jnp.array(values, copy=True), batched,
-                                      jnp.int32(0))
-        # one bulk D2H for the stacked outputs, then free numpy views —
-        # cheaper than dispatching n_intervals x n_outputs device slices
-        outs = jax.device_get(outs)
-        return ([jax.tree_util.tree_map(lambda x, i=i: x[i], outs)
-                 for i in range(n_intervals)], values)
+        res_all, ebs_all, values, _ = self._fused(
+            jnp.array(values, copy=True), batched, jnp.int32(0))
+        return self._outs(res_all, ebs_all, n_intervals), values
+
+    def _outs(self, res_all, ebs_all, n_intervals: int):
+        """Shared output program + one bulk D2H, split per interval."""
+        outs = jax.device_get(self._post(res_all, ebs_all))
+        return [jax.tree_util.tree_map(lambda x, i=i: x[i], outs)
+                for i in range(n_intervals)]
 
 
 def _batches(stream: Dict[str, np.ndarray], interval: int):
@@ -114,11 +157,12 @@ def _batches(stream: Dict[str, np.ndarray], interval: int):
         yield {k: jnp.asarray(v[i : i + interval]) for k, v in stream.items()}
 
 
-def _eval_interval(store: StateStore, ops, ebs, *, app: AppSpec,
+def _eval_interval(store: StateStore, ops, *, app: AppSpec,
                    cfg: EngineConfig, prestructured=None):
     """State-access mode for one interval: restructure exactly once,
-    evaluate, optionally re-pass with aborted txns masked (reusing the same
-    sort), then resume compute mode over the stored events."""
+    evaluate, optionally re-pass with aborted txns masked (reusing the
+    same sort).  Returns materialized per-op results; post-processing
+    happens in the shared output program (``_post_stream``)."""
     pres = prestructured
     if pres is None and cfg.scheme in CHAIN_SCHEMES:
         # the segmented-scan path reads only 4 sorted columns — skip the rest
@@ -155,15 +199,32 @@ def _eval_interval(store: StateStore, ops, ebs, *, app: AppSpec,
             n_partitions=cfg.n_partitions, max_dep_levels=cfg.max_dep_levels,
             use_pallas=cfg.use_pallas, prestructured=pres2)
 
-    out = _post_interval(res, ebs, app=app)
-    return out, values, stats
+    return res, values, stats
+
+
+def _post_stream(res_all, ebs_all, *, app: AppSpec):
+    """Post-process a whole stream's stacked per-op results.
+
+    This is THE output program: every driver (host loop, fused scan,
+    sharded fused) evaluates to *materialized* per-op results and feeds
+    them through this one jitted function on identical ``[n_intervals,
+    N, ...]`` shapes.  Keeping the app-level reductions in a single
+    compilation context is what makes the drivers' outputs bit-identical:
+    XLA CPU lowers a reduction fused into a producer loop with a
+    different float association than a standalone reduction (~1-ulp
+    drift), so post-processing must never compile inside one driver's
+    evaluation fusion but not another's.
+    """
+    return jax.vmap(lambda r, e: _post_interval(r, e, app=app))(res_all,
+                                                                ebs_all)
 
 
 def _post_interval(res, ebs, *, app: AppSpec):
-    """Compute mode resumes: post-process stored events.
+    """Compute mode resumes: post-process one interval's stored events.
 
-    Shared verbatim by both drivers so they stay bit-identical.  (Results
-    may carry kernel-padded lanes in the fused Pallas path — sliced here.)
+    (Results may carry kernel-padded lanes in the fused Pallas path —
+    sliced here.)  Drivers do not call this directly; outputs go through
+    ``_post_stream`` so every driver shares one compilation context.
     """
     batch = res["success"].shape[0] // app.max_ops
     shaped = OpResults(
@@ -179,7 +240,8 @@ def _step_impl(store: StateStore, events, ts_base, *, app: AppSpec,
     # -- compute mode: pre-process + postpone state access (D1) ------------
     ops, ebs = build_opbatch(app, store, events, ts_base)
     # -- state access mode: dynamic restructuring execution (D2) -----------
-    return _eval_interval(store, ops, ebs, app=app, cfg=cfg)
+    res, values, stats = _eval_interval(store, ops, app=app, cfg=cfg)
+    return res, ebs, values, stats
 
 
 def _fused_impl(values, events_b, ts0, *, app: AppSpec, cfg: EngineConfig,
@@ -221,11 +283,11 @@ def _fused_impl(values, events_b, ts0, *, app: AppSpec, cfg: EngineConfig,
             padded = True
 
     if assoc_fast:
-        outs, values, stats = _fused_assoc(store, ops_all, ebs_all,
-                                           app=app, cfg=cfg)
+        res_all, values, stats = _fused_assoc(store, ops_all, app=app,
+                                              cfg=cfg)
         if padded:
             values = values[:, : app.width]
-        return outs, values, stats
+        return res_all, ebs_all, values, stats
 
     # generic path: hoist the restructure sort for chain schemes; the scan
     # body evaluates one interval from its prestructured batch
@@ -236,37 +298,35 @@ def _fused_impl(values, events_b, ts0, *, app: AppSpec, cfg: EngineConfig,
         )(ops_all)
 
     def body(values, xs):
-        ops, ebs, pres = xs
+        ops, pres = xs
         st = dataclasses.replace(store, values=values)
-        out, values, stats = _eval_interval(st, ops, ebs, app=app, cfg=cfg,
+        res, values, stats = _eval_interval(st, ops, app=app, cfg=cfg,
                                             prestructured=pres)
-        return values, (out, stats)
+        return values, (res, stats)
 
-    values, (outs, stats) = jax.lax.scan(body, store.values,
-                                         (ops_all, ebs_all, pres_all))
-    return outs, values, stats
+    values, (res_all, stats) = jax.lax.scan(body, store.values,
+                                            (ops_all, pres_all))
+    return res_all, ebs_all, values, stats
 
 
-def _fused_assoc(store: StateStore, ops_all, ebs_all, *, app: AppSpec,
+def _fused_assoc(store: StateStore, ops_all, *, app: AppSpec,
                  cfg: EngineConfig):
     """Associative fast path: the scan body is O(N) gathers + elementwise.
 
     Sort, coefficient scans and commit gather maps for ALL intervals run
-    batched before the scan; results return to flat layout and post-process
-    batched after it.
+    batched before the scan; results return to flat layout inside the
+    body and stack as scan outputs (post-processing happens in the shared
+    output program, ``_post_stream``).
     """
     plan_all = jax.vmap(
         lambda o: tstream_scan_plan(store, o, app.funs, rowmajor_ts=True)
     )(ops_all)
     plan_all = tstream_scan_coefs_stream(plan_all, use_pallas=cfg.use_pallas)
 
-    def body(values, xs):
-        plan, ebs = xs
+    def body(values, plan):
         res, new_values, stats = tstream_scan_execute(
             values, plan, store.pad_uid)
-        out = _post_interval(res, ebs, app=app)
-        return new_values, (out, stats)
+        return new_values, (res, stats)
 
-    values, (outs, stats) = jax.lax.scan(body, store.values,
-                                         (plan_all, ebs_all))
-    return outs, values, stats
+    values, (res_all, stats) = jax.lax.scan(body, store.values, plan_all)
+    return res_all, values, stats

@@ -162,12 +162,18 @@ class StateStore:
     ``values[S+1, W]`` — slot S is the padding chain (all invalid ops target
     it).  Table t owns slots [base[t], base[t] + capacity[t]).
     ``kind_max`` marks tables whose RMW family is max-type (LPC sketches).
+
+    ``slot_is_max`` (optional, bool[S+1]) overrides the table-derived
+    max-type flags with explicit per-slot flags.  Ownership-permuted local
+    stores need this: the permutation interleaves slots from different
+    tables, so max-ness no longer follows table ranges (``core/ownership``).
     """
 
     values: jnp.ndarray                    # f32[S+1, W]
     table_base: tuple = dataclasses.field(metadata=dict(static=True), default=())
     table_capacity: tuple = dataclasses.field(metadata=dict(static=True), default=())
     table_is_max: tuple = dataclasses.field(metadata=dict(static=True), default=())
+    slot_is_max: Optional[jnp.ndarray] = None  # bool[S+1] per-slot override
 
     @property
     def n_slots(self) -> int:
@@ -182,6 +188,8 @@ class StateStore:
 
     def uid_is_max(self) -> jnp.ndarray:
         """bool[S+1]: whether each slot belongs to a max-type table."""
+        if self.slot_is_max is not None:
+            return self.slot_is_max
         flags = jnp.zeros(self.values.shape[0], dtype=bool)
         for t, (b, c) in enumerate(zip(self.table_base, self.table_capacity)):
             if self.table_is_max[t]:

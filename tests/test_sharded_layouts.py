@@ -1,6 +1,8 @@
 """Chain-shard layout correctness (the paper's NUMA configurations) as a
-pytest — all three layouts must equal the sequential oracle.  Runs in a
-subprocess (needs an 8-device placeholder mesh)."""
+pytest — all three layouts must equal the sequential oracle on the
+per-batch path AND be bit-identical to the single-device fused driver on
+the fused sharded streaming path.  Runs in a subprocess (needs an
+8-device placeholder mesh)."""
 import json
 import os
 import subprocess
@@ -11,10 +13,13 @@ def test_all_layouts_oracle_correct():
     worker = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                           "fig14_numa_worker.py")
     proc = subprocess.run([sys.executable, worker], capture_output=True,
-                          text=True, timeout=900)
+                          text=True, timeout=1500)
     assert proc.returncode == 0, proc.stderr[-1500:]
     data = json.loads(proc.stdout.strip().splitlines()[-1])
     assert set(data) == {"shared_nothing", "shared_per_socket",
                          "shared_everything"}
     for layout, d in data.items():
         assert d["correct"], f"{layout} diverged from the oracle"
+        assert d["fused_bit_identical"], \
+            f"{layout} fused sharded stream diverged from the fused driver"
+        assert d["fused_dropped"] == 0, f"{layout} dropped exchange ops"
