@@ -1,0 +1,151 @@
+"""Restructure backbone microbenchmark: counting partition vs packed sort.
+
+Two row families, machine-readable into ``BENCH_restructure.json`` via
+``benchmarks/run.py`` (DESIGN.md §2.1):
+
+* ``plan`` rows — wall time of the full values-independent restructure
+  plan (chain order, inverse map, segment geometry, commit gather map)
+  under each forced backbone ("partition" / "packed" / "lexsort") across
+  an N × n_slots grid, plus the rung the auto ladder resolves for that
+  cell.  This measures the crossover the ladder encodes: the counting
+  partition wins for compact key spaces at large N; the comparison sort
+  wins for large sparse stores on CPU XLA.
+* ``exchange`` rows — the owner-routed exchange bucketing: the
+  counting-partition pass (what ``bucket_by_owner`` dispatches to inside
+  its measured win regime) against the sort-based plan it replaced
+  (``packed_stable_sort`` + a separate ``segment_sum`` for the
+  capacities), at n_route = 8 destinations.
+
+The minimum over iterations is the headline estimator (external load only
+adds time — same rationale as ``timeit``; DESIGN.md §8.3).
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ownership import bucket_by_owner
+from repro.core.restructure import (commit_from_histogram, commit_index,
+                                    packed_sort_fits, restructure,
+                                    restructure_path)
+from repro.core.types import OpBatch
+
+
+def _wall_min_interleaved(calls: dict, iters: int) -> dict:
+    """Min wall seconds per labelled thunk, measured **interleaved** so
+    machine-load drift lands on every contender equally (the same A/B
+    protocol as ``common.stream_wall_time_pair``)."""
+    for fn in calls.values():          # warm all compiles before timing any
+        jax.block_until_ready(fn())
+    ts = {k: [] for k in calls}
+    for _ in range(iters):
+        for k, fn in calls.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts[k].append(time.perf_counter() - t0)
+    return {k: float(np.min(v)) for k, v in ts.items()}
+
+
+def _mk_ops(rng, n: int, n_slots: int, theta: float = 0.6,
+            max_ops: int = 8) -> OpBatch:
+    """Zipf-skewed uid stream in row-major (ts, slot) layout."""
+    ranks = np.arange(1, n_slots + 1, dtype=np.float64)
+    p = ranks ** -theta
+    p /= p.sum()
+    uid = rng.choice(n_slots, size=n, p=p).astype(np.int32)
+    idx = np.arange(n, dtype=np.int32)
+    return OpBatch(
+        uid=jnp.asarray(uid),
+        ts=jnp.asarray(idx // max_ops), txn=jnp.asarray(idx // max_ops),
+        slot=jnp.asarray(idx % max_ops),
+        kind=jnp.zeros((n,), jnp.int32), fun=jnp.zeros((n,), jnp.int32),
+        gate=jnp.full((n,), -1, jnp.int32),
+        operand=jnp.asarray(rng.uniform(size=(n, 4)).astype(np.float32)),
+        valid=jnp.asarray(rng.uniform(size=n) > 0.05))
+
+
+@partial(jax.jit, static_argnames=("pad_uid", "method"))
+def _plan(ops, pad_uid: int, method: str):
+    """The full values-independent restructure plan one backbone feeds."""
+    sops, ch = restructure(ops, pad_uid, rowmajor_ts=True, light=True,
+                           method=method)
+    if ch.counts is not None:
+        cp, cok = commit_from_histogram(ch.counts, ch.starts)
+    else:
+        cp, cok = commit_index(sops.uid, pad_uid + 1)
+    return (sops.uid, sops.operand, ch.order, ch.inv, ch.seg_start,
+            ch.seg_id, ch.pos, cp, cok)
+
+
+# both production exchange backbones, forced through bucket_by_owner's
+# ``counting`` switch so the bench A/Bs exactly what ships
+_bucket = jax.jit(bucket_by_owner,
+                  static_argnames=("n_route", "cap", "counting"))
+
+
+def _grids(quick: bool, smoke: bool):
+    if smoke:
+        return [(4096, (8, 1024))], [4096], 3
+    if quick:
+        return ([(32768, (8, 201, 10000)),
+                 (131072, (8, 201, 10000)),
+                 (524288, (8, 201, 10000))],
+                [40960, 163840, 655360, 1310720], 7)
+    return ([(n, (8, 64, 201, 1024, 10000))
+             for n in (32768, 131072, 524288, 1048576)],
+            [40960, 163840, 655360, 1310720, 2621440], 11)
+
+
+def run(quick: bool = True, smoke: bool = False):
+    rng = np.random.default_rng(23)
+    plan_grid, ex_ns, iters = _grids(quick, smoke)
+    rows = []
+
+    for n, slots_list in plan_grid:
+        for s in slots_list:
+            ops = _mk_ops(rng, n, s)
+            auto = restructure_path(n, s, rowmajor_ts=True)
+            methods = ["partition"]
+            if packed_sort_fits(n, s, bits=32):
+                methods.append("packed")
+            else:
+                # the 32-bit packed ceiling (u64 needs x64): lexsort is the
+                # comparator the ladder actually falls back to here
+                methods.append("lexsort")
+            if n <= 131072 and "lexsort" not in methods:
+                methods.append("lexsort")
+            cell = _wall_min_interleaved(
+                {m: (lambda m=m: _plan(ops, s, m)) for m in methods},
+                iters=iters)
+            sort_ref = cell.get("packed", cell.get("lexsort"))
+            for i, m in enumerate(methods):
+                rows.append(dict(
+                    fig="restructure", kind="plan", scheme=m,
+                    n=n, n_slots=s, shape=f"N{n}-S{s}", auto_path=auto,
+                    wall_s=cell[m], events_per_s=n / cell[m],
+                    **({"partition_speedup_vs_sort":
+                        sort_ref / cell["partition"]} if i == 0 else {})))
+
+    n_route = 8
+    for n in ex_ns:
+        dst = jnp.asarray(rng.integers(0, n_route + 1, n).astype(np.int32))
+        cap = max(1, min(2 * (n // n_route), n))
+        cell = _wall_min_interleaved(
+            dict(counting=lambda: _bucket(dst, n_route, cap, counting=True),
+                 sort=lambda: _bucket(dst, n_route, cap, counting=False)),
+            iters=iters)
+        wc, ws = cell["counting"], cell["sort"]
+        rows.append(dict(
+            fig="restructure", kind="exchange", scheme="partition",
+            n=n, n_route=n_route, cap=cap, shape=f"N{n}-R{n_route}",
+            wall_s=wc, events_per_s=n / wc,
+            partition_speedup_vs_packed=ws / wc))
+        rows.append(dict(
+            fig="restructure", kind="exchange", scheme="packed",
+            n=n, n_route=n_route, cap=cap, shape=f"N{n}-R{n_route}",
+            wall_s=ws, events_per_s=n / ws))
+    return rows

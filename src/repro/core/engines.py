@@ -44,8 +44,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .restructure import (Chains, commit_index, restructure,
-                          segmented_scan_affine, segmented_scan_max)
+from .restructure import (Chains, commit_from_histogram, commit_index,
+                          restructure, segmented_scan_affine,
+                          segmented_scan_max)
 from .types import FunSpec, OpBatch, OpKind, StateStore
 
 Prestructured = Tuple[OpBatch, Chains]
@@ -166,7 +167,9 @@ class ScanPlan:
 def tstream_scan_plan(store: StateStore, ops: OpBatch,
                       funs: Tuple[FunSpec, ...], *,
                       prestructured: Optional[Prestructured] = None,
-                      rowmajor_ts: bool = False) -> ScanPlan:
+                      rowmajor_ts: bool = False,
+                      restructure_method: str = "auto",
+                      use_pallas: bool = False) -> ScanPlan:
     # the scan path evaluates ops purely from (scanned) coefficients: every
     # fun must be associative (affine family or max) — conditional funs
     # like TAKE belong on the lockstep path and would silently mis-evaluate
@@ -177,7 +180,8 @@ def tstream_scan_plan(store: StateStore, ops: OpBatch,
             f"tstream_scan requires associative funs; got {bad} — use the "
             "lockstep path (scheme='tstream'/'tstream_lockstep') instead")
     sops, ch = (restructure(ops, store.pad_uid, rowmajor_ts=rowmajor_ts,
-                            light=True)
+                            light=True, method=restructure_method,
+                            use_pallas=use_pallas)
                 if prestructured is None else prestructured)
     has_max = any(store.table_is_max)
 
@@ -202,7 +206,13 @@ def tstream_scan_plan(store: StateStore, ops: OpBatch,
         m = jnp.where((is_max_s & is_max_fun & sops.valid)[:, None],
                       sops.operand, -jnp.inf)
 
-    commit_pos, commit_ok = commit_index(sops.uid, store.values.shape[0])
+    # commit map: free from the partition path's histogram; otherwise two
+    # binary-search passes over the sorted uid column
+    if (ch.counts is not None
+            and ch.counts.shape[-1] == store.values.shape[0]):
+        commit_pos, commit_ok = commit_from_histogram(ch.counts, ch.starts)
+    else:
+        commit_pos, commit_ok = commit_index(sops.uid, store.values.shape[0])
     return ScanPlan(sops=sops, ch=ch, af=a, bf=b, afi=None, bfi=None,
                     mx=m, mxi=None, is_max_s=is_max_s,
                     commit_pos=commit_pos, commit_ok=commit_ok)
@@ -306,9 +316,12 @@ def tstream_scan_execute(values: jnp.ndarray, plan: ScanPlan,
 def eval_tstream_scan(store: StateStore, ops: OpBatch,
                       funs: Tuple[FunSpec, ...], *, use_pallas: bool = False,
                       prestructured: Optional[Prestructured] = None,
-                      rowmajor_ts: bool = False):
+                      rowmajor_ts: bool = False,
+                      restructure_method: str = "auto"):
     plan = tstream_scan_plan(store, ops, funs, prestructured=prestructured,
-                             rowmajor_ts=rowmajor_ts)
+                             rowmajor_ts=rowmajor_ts,
+                             restructure_method=restructure_method,
+                             use_pallas=use_pallas)
     plan = tstream_scan_coefs(plan, use_pallas=use_pallas)
     return tstream_scan_execute(store.values, plan, store.pad_uid)
 
@@ -642,10 +655,12 @@ def evaluate(store: StateStore, ops: OpBatch, funs: Tuple[FunSpec, ...],
              has_gates: bool = False, n_partitions: int = 16,
              max_dep_levels: int = 3, use_pallas: bool = False,
              prestructured: Optional[Prestructured] = None,
-             rowmajor_ts: bool = False):
+             rowmajor_ts: bool = False, restructure_method: str = "auto"):
     if scheme in CHAIN_SCHEMES and prestructured is None:
         prestructured = restructure(ops, store.pad_uid,
-                                    rowmajor_ts=rowmajor_ts)
+                                    rowmajor_ts=rowmajor_ts,
+                                    method=restructure_method,
+                                    use_pallas=use_pallas)
     if scheme == "tstream":
         if associative_only and not has_gates:
             return eval_tstream_scan(store, ops, funs, use_pallas=use_pallas,

@@ -14,11 +14,14 @@ On top of it sit two op-distribution strategies:
   every device receives the full OpBatch and masks out non-local ops —
   O(n_dev · N) replicated bytes per batch.
 * owner-routed exchange (``core/sharded_stream.py``): each device buckets
-  the ops *it built* by destination owner using the packed-uint32
-  single-operand sort from ``restructure.py``, pads buckets to a fixed
-  capacity, and ships them with ONE ``all_to_all`` — O(N + padding) bytes.
-  Bucket overflow drops ops; drops are **counted and surfaced**, never
-  silent (``bucket_by_owner``).
+  the ops *it built* by destination owner with the one-pass counting
+  partition (``kernels/radix_partition``) — destination counts, bucket
+  offsets and stable cell ranks all come from the SAME histogram pass, so
+  exchange capacities and overflow stats are free by-products (the
+  packed-sort + separate segment_sum it replaces did the work twice).
+  Buckets pad to a fixed capacity and ship with ONE ``all_to_all`` —
+  O(N + padding) bytes.  Bucket overflow drops ops; drops are **counted
+  and surfaced**, never silent (``bucket_by_owner``).
 
 ``make_local_store`` is the one place local (per-shard) stores are
 constructed, with all fields — ``table_base``/``table_capacity``/
@@ -33,7 +36,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .restructure import packed_sort_fits, packed_stable_sort
+from repro.kernels.radix_partition.ops import radix_partition_rank
+
+from .restructure import packed_stable_sort, partition_permutation
 from .types import StateStore
 
 LAYOUTS = ("shared_nothing", "shared_per_socket", "shared_everything")
@@ -128,22 +133,45 @@ class RoutePlan:
     dropped: jnp.ndarray
 
 
-def bucket_by_owner(dst: jnp.ndarray, n_route: int, cap: int) -> RoutePlan:
+def _exchange_counting_wins(n: int, n_route: int) -> bool:
+    """Measured host-backend crossover (BENCH_restructure.json exchange
+    rows): the counting pass wins while its [K, N] one-hot histogram is
+    monolithic (cache-resident cumsum) and again at large N where the
+    sort's log factor dominates; the band between goes to the packed
+    sort (~1.3x faster there)."""
+    return (n_route + 1) * n <= (1 << 20) or n >= (1 << 19)
+
+
+def bucket_by_owner(dst: jnp.ndarray, n_route: int, cap: int,
+                    counting: bool | None = None) -> RoutePlan:
     """Bucket local rows by ``dst`` (i32[N] in [0, n_route]; ``n_route``
     marks rows that are never shipped, e.g. padding ops).
 
-    Reuses the packed-uint32 single-operand sort: one ``jnp.sort`` of
-    ``dst << idx_bits | row`` keys yields the stable bucket grouping, and
-    bucket extraction is pure gathers (no scatters in the hot path).
+    One counting-partition pass (``kernels/radix_partition``) yields the
+    per-destination histogram, bucket offsets and each row's stable cell
+    rank together — no sort, and the capacity/overflow accounting reads
+    the same counts.  Bucket extraction stays pure gathers.  Inside the
+    band where the packed sort measures faster, the sort-based plan is
+    kept (same outputs bit for bit; the histogram then costs one
+    ``segment_sum``).  ``counting`` forces a backbone (the restructure
+    benchmark A/Bs the two production paths through this).
     """
     n = dst.shape[0]
-    assert packed_sort_fits(n, n_route), (n, n_route)
-    order, _, pos = packed_stable_sort(dst, n_route)
-    counts = jax.ops.segment_sum(jnp.ones((n,), jnp.int32), dst,
-                                 num_segments=n_route + 1)
-    starts = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])  # [n_route+1]
-    rank = pos - jnp.take(starts, dst)
+    if counting is None:
+        counting = _exchange_counting_wins(n, n_route)
+    if counting:
+        # XLA counting ref only (no use_pallas plumbing): this runs
+        # vmapped over intervals inside the shard_map body, where the
+        # kernel's sequential-grid carry is not reachable — the batched
+        # kernel entry is for the hoisted restructure_stream call
+        rank, counts = radix_partition_rank(dst, n_route + 1)
+        starts, _, order = partition_permutation(dst, rank, counts)
+    else:
+        order, _, pos = packed_stable_sort(dst, n_route)
+        counts = jax.ops.segment_sum(jnp.ones((n,), jnp.int32), dst,
+                                     num_segments=n_route + 1)
+        starts = (jnp.cumsum(counts) - counts).astype(jnp.int32)
+        rank = pos - jnp.take(starts, dst)
     j = starts[:n_route, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
     ok = (jnp.arange(cap, dtype=jnp.int32)[None, :]
           < jnp.minimum(counts[:n_route], cap)[:, None])

@@ -38,7 +38,7 @@ from .blotter import AppSpec, build_opbatch
 from .engines import (CHAIN_SCHEMES, EngineStats, evaluate,
                       tstream_scan_coefs_stream, tstream_scan_execute,
                       tstream_scan_plan)
-from .restructure import restructure
+from .restructure import restructure, restructure_stream
 from .types import OpResults, StateStore
 
 
@@ -52,6 +52,9 @@ class EngineConfig:
     # sharded streaming: resolve uid -> owner through the hash-probe
     # kernel instead of the direct-addressed gather (DESIGN.md §2.5)
     use_hash_probe_route: bool = False
+    # restructure backbone: "auto" resolves the partition -> packed-sort ->
+    # lexsort ladder (DESIGN.md §2.1); force a rung for parity tests/benches
+    restructure_method: str = "auto"
 
 
 class DualModeEngine:
@@ -168,7 +171,9 @@ def _eval_interval(store: StateStore, ops, *, app: AppSpec,
         # the segmented-scan path reads only 4 sorted columns — skip the rest
         light = (cfg.scheme in ("tstream", "tstream_scan")
                  and app.associative_only)
-        pres = restructure(ops, store.pad_uid, rowmajor_ts=True, light=light)
+        pres = restructure(ops, store.pad_uid, rowmajor_ts=True, light=light,
+                           method=cfg.restructure_method,
+                           use_pallas=cfg.use_pallas)
     res, values, stats = evaluate(
         store, ops, app.funs, cfg.scheme,
         associative_only=app.associative_only, has_gates=app.has_gates,
@@ -289,13 +294,13 @@ def _fused_impl(values, events_b, ts0, *, app: AppSpec, cfg: EngineConfig,
             values = values[:, : app.width]
         return res_all, ebs_all, values, stats
 
-    # generic path: hoist the restructure sort for chain schemes; the scan
+    # generic path: hoist the restructure pass for chain schemes; the scan
     # body evaluates one interval from its prestructured batch
     pres_all = None
     if cfg.scheme in CHAIN_SCHEMES:
-        pres_all = jax.vmap(
-            lambda o: restructure(o, store.pad_uid, rowmajor_ts=True)
-        )(ops_all)
+        pres_all = restructure_stream(
+            ops_all, store.pad_uid, rowmajor_ts=True,
+            method=cfg.restructure_method, use_pallas=cfg.use_pallas)
 
     def body(values, xs):
         ops, pres = xs
@@ -313,14 +318,19 @@ def _fused_assoc(store: StateStore, ops_all, *, app: AppSpec,
                  cfg: EngineConfig):
     """Associative fast path: the scan body is O(N) gathers + elementwise.
 
-    Sort, coefficient scans and commit gather maps for ALL intervals run
-    batched before the scan; results return to flat layout inside the
-    body and stack as scan outputs (post-processing happens in the shared
-    output program, ``_post_stream``).
+    The one-pass restructure plan (partition ranks + histograms, ONE
+    kernel dispatch under ``use_pallas``), coefficient scans and commit
+    gather maps for ALL intervals run batched before the scan; results
+    return to flat layout inside the body and stack as scan outputs
+    (post-processing happens in the shared output program,
+    ``_post_stream``).
     """
+    pres_all = restructure_stream(
+        ops_all, store.pad_uid, rowmajor_ts=True, light=True,
+        method=cfg.restructure_method, use_pallas=cfg.use_pallas)
     plan_all = jax.vmap(
-        lambda o: tstream_scan_plan(store, o, app.funs, rowmajor_ts=True)
-    )(ops_all)
+        lambda o, p: tstream_scan_plan(store, o, app.funs,
+                                       prestructured=p))(ops_all, pres_all)
     plan_all = tstream_scan_coefs_stream(plan_all, use_pallas=cfg.use_pallas)
 
     def body(values, plan):

@@ -7,8 +7,9 @@ the same hoist-then-scan schedule as the single-device fused driver
 * **compute mode is event-parallel**: each device pre-processes and
   registers ops for its contiguous slice of every punctuation interval;
 * **ops are owner-routed, not replicated**: each device buckets its ops
-  by ``owner(uid)`` with the capacity-padded packed-uint32 count/sort
-  (``core/ownership``) and ships them with a single ``all_to_all``
+  by ``owner(uid)`` with the capacity-padded one-pass counting partition
+  (``core/ownership`` over ``kernels/radix_partition``) and ships them
+  with a single ``all_to_all``
   covering *every interval at once* — O(N + padding) exchanged rows per
   interval instead of the per-batch path's O(n_dev · N) replication;
 * **each device restructures and evaluates only its local chains**; the
@@ -64,7 +65,7 @@ from .ownership import (LAYOUTS, bucket_by_owner, build_ownership,
                         exchange_capacity, make_local_store, permute_values,
                         route_gather, unchunk_output, unpermute_values,
                         unroute_gather)
-from .restructure import Chains, restructure
+from .restructure import Chains, restructure_stream
 from .types import OpBatch, StateStore
 
 log = logging.getLogger(__name__)
@@ -369,9 +370,12 @@ def _stream_body(blocks, sim_b, events_loc, *, eng: ShardedStream, dims,
             own_mask = jnp.concatenate(
                 [(jnp.arange(s_pad) % n_dev) == dev,
                  jnp.zeros((1,), bool)])
+        pres_all = restructure_stream(
+            rops, lpad, rowmajor_ts=True, light=True,
+            method=cfg.restructure_method, use_pallas=cfg.use_pallas)
         plan_all = jax.vmap(
-            lambda o: tstream_scan_plan(lstore, o, app.funs,
-                                        rowmajor_ts=True))(rops)
+            lambda o, p: tstream_scan_plan(lstore, o, app.funs,
+                                           prestructured=p))(rops, pres_all)
         plan_all = tstream_scan_coefs_stream(plan_all,
                                              use_pallas=cfg.use_pallas)
 
@@ -391,8 +395,9 @@ def _stream_body(blocks, sim_b, events_loc, *, eng: ShardedStream, dims,
         res_routed = {k: jax.vmap(Chains.untake)(plan_all.ch, v)
                       for k, v in res_sorted.items()}
     else:
-        pres_all = jax.vmap(
-            lambda o: restructure(o, lpad, rowmajor_ts=True))(rops)
+        pres_all = restructure_stream(
+            rops, lpad, rowmajor_ts=True,
+            method=cfg.restructure_method, use_pallas=cfg.use_pallas)
         lk = partial(
             _lockstep_interval, eng=eng, R=R, N_glob=N_glob,
             pad_uid=lpad, Wq=Wp, axis=axes[0], per=per, s_pad=s_pad,

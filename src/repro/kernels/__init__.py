@@ -1,7 +1,9 @@
 """Pallas TPU kernels for TStream's state-access hot spots.
 
-segscan    — segmented scans evaluating operation chains (the D2 hot loop)
-hash_probe — one-hot-matmul bucketed hash probe (sparse-key index lookup)
+segscan         — segmented scans evaluating operation chains (the D2 hot loop)
+hash_probe      — one-hot-matmul bucketed hash probe (sparse-key index lookup)
+radix_partition — one-pass stable counting partition: the restructure sort
+                  replacement (rank + histogram in one sweep)
 
 Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper) and ref.py (pure-jnp oracle); validated in interpret mode on CPU.

@@ -6,6 +6,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..runtime import default_interpret
 from . import kernel as K
 
 
@@ -14,7 +15,7 @@ def hash_probe(keys: jnp.ndarray, table_lo: jnp.ndarray,
                table_hi: jnp.ndarray, interpret: bool | None = None):
     """keys i32[N] -> slot i32[N] (-1 if absent); pads N to the block size."""
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = default_interpret()
     n = keys.shape[0]
     rows = -(-n // K.BLOCK_Q) * K.BLOCK_Q
     kp = jnp.pad(keys.astype(jnp.int32), (0, rows - n), constant_values=0)

@@ -1,0 +1,1 @@
+"""One-pass stable radix/counting partition (restructure backbone)."""

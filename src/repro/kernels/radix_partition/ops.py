@@ -1,0 +1,60 @@
+"""Jit'd wrapper: pad to kernel tiling, dispatch kernel vs XLA counting ref.
+
+Accepts 1-D ``[N]`` or batched 2-D ``[BN, N]`` keys; the batched Pallas
+path partitions the whole stack in ONE dispatch (grid ``(BN, blocks)``),
+which is how the fused stream driver partitions every interval at once.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..runtime import default_interpret
+from . import kernel as K
+from .ref import radix_partition_rank_ref
+
+
+def kernel_fits(n_buckets: int, n_rows: int = 0) -> bool:
+    """Whether the one-hot kernel applies: bucket axis within its VMEM
+    bound AND per-batch rows within the f32 carry's exact-integer range
+    (ranks/counts are carried in f32; beyond 2^24 they would round and
+    silently corrupt the partition — the XLA ref handles such batches)."""
+    return (_padded_buckets(n_buckets) <= K.MAX_KERNEL_BUCKETS
+            and n_rows < K.MAX_KERNEL_ROWS)
+
+
+def _padded_buckets(n_buckets: int) -> int:
+    # +1: row padding goes to a private dump bucket past the real ones
+    return -(-(n_buckets + 1) // K.LANES) * K.LANES
+
+
+@partial(jax.jit, static_argnames=("n_buckets", "use_pallas", "interpret"))
+def radix_partition_rank(keys: jnp.ndarray, n_buckets: int, *,
+                         use_pallas: bool = False,
+                         interpret: bool | None = None):
+    """keys: i32[N] or i32[BN, N], values in [0, n_buckets).
+
+    Returns ``(rank, counts)`` with ``rank`` the stable within-bucket rank
+    of each row (shape of ``keys``) and ``counts`` the per-batch histogram
+    (``[n_buckets]`` / ``[BN, n_buckets]``).  ``use_pallas`` dispatches the
+    kernel when its bucket bound holds, else the XLA counting ref.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    squeeze = keys.ndim == 1
+    k2 = keys[None] if squeeze else keys
+    assert k2.ndim == 2, keys.shape
+    if use_pallas and kernel_fits(n_buckets, k2.shape[1]):
+        bn, n = k2.shape
+        rows = -(-n // K.BLOCK_ROWS) * K.BLOCK_ROWS
+        kpad = jnp.pad(k2.astype(jnp.int32), ((0, 0), (0, rows - n)),
+                       constant_values=n_buckets)
+        rank, counts = K.radix_partition_pallas(
+            kpad, _padded_buckets(n_buckets), interpret=interpret)
+        rank, counts = rank[:, :n], counts[:, :n_buckets]
+    else:
+        rank, counts = jax.vmap(
+            partial(radix_partition_rank_ref, n_buckets=n_buckets))(k2)
+    return (rank[0], counts[0]) if squeeze else (rank, counts)

@@ -1,0 +1,95 @@
+"""XLA counting-partition reference: sort-free rank + histogram.
+
+Serves two roles (mirroring the other kernels' ``ref.py``): the oracle
+the Pallas kernel is validated against, and the production *fallback
+rung* of the restructure ladder — the pure-jnp counting path used when
+the kernel is off or the bucket count exceeds its VMEM bound.
+
+Two formulations, switched on histogram size (everything parallel — no
+scan, no sort):
+
+* **small-K transpose** (the CPU hot path): a ``[K, N]`` one-hot whose
+  row-wise inclusive cumsum IS the running histogram — ``rank[i]`` is one
+  gather at ``(key[i], i)`` and ``counts`` is the last column.  O(K·N)
+  contiguous vector work and **zero scatters**, which is what makes the
+  counting rung beat the comparison sort on CPU XLA for compact key
+  spaces (owner routing: K = n_dev+1; see BENCH_restructure.json for the
+  measured crossover).
+* **blocked** (large K): per-block scatter-add histograms, exclusive
+  cumsum over blocks for the carry, and a lower-triangular equal-key
+  count for the within-block rank — O(N·B + T·K) with bounded ``[T, K]``
+  memory.  This mirrors the kernel's block/carry structure and keeps the
+  path memory-sane when ``K·N`` would not fit.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+# small-K transpose path: bucket-count bound, and per-step one-hot elements
+# kept cache-resident (the [K, N] cumsum falls off a cache cliff otherwise)
+SMALL_K_MAX = 128
+_SMALL_STEP_ELEMS = 1 << 20
+
+
+def _rank_small(keys: jnp.ndarray, n_buckets: int):
+    """[K, N] one-hot transpose cumsum: scatter-free rank + histogram.
+
+    The column axis is processed in cache-sized blocks under a ``lax.scan``
+    carrying the running histogram, so per-element cost stays flat in N.
+    """
+    n = keys.shape[0]
+    nb = max(256, min(max(n, 1), _SMALL_STEP_ELEMS // max(n_buckets, 1)))
+    steps = -(-max(n, 1) // nb)
+    if steps == 1:
+        nb = max(n, 1)
+    # padding keys = n_buckets match no one-hot row (and gathers clamp)
+    kp = jnp.full((steps * nb,), n_buckets, keys.dtype).at[:n].set(keys)
+    iota = jnp.arange(n_buckets, dtype=keys.dtype)
+    col = jnp.arange(nb, dtype=jnp.int32)
+
+    def body(carry, k):
+        ohT = k[None, :] == iota[:, None]                      # [K, nb]
+        run = jnp.cumsum(ohT.astype(jnp.int32), axis=1) + carry[:, None]
+        rank_blk = jnp.take(run.reshape(-1),
+                            jnp.minimum(k.astype(jnp.int32), n_buckets - 1)
+                            * nb + col)
+        return run[:, -1], rank_blk
+
+    counts, ranks = jax.lax.scan(body, jnp.zeros((n_buckets,), jnp.int32),
+                                 kp.reshape(steps, nb))
+    return ranks.reshape(-1)[:n] - 1, counts
+
+
+def _rank_blocked(keys: jnp.ndarray, n_buckets: int):
+    """Blocked histogram + carry + triangular within-block rank."""
+    n = keys.shape[0]
+    t = -(-max(n, 1) // BLOCK)
+    # block-padding rows land in a private dump bucket (n_buckets)
+    kp = jnp.full((t * BLOCK,), n_buckets, keys.dtype).at[:n].set(keys)
+    k2 = kp.reshape(t, BLOCK)
+
+    hist = jax.vmap(
+        lambda k: jnp.zeros((n_buckets + 1,), jnp.int32).at[k].add(1))(k2)
+    carry = jnp.cumsum(hist, axis=0) - hist                # excl over blocks
+    eq = k2[:, :, None] == k2[:, None, :]                  # [t, B, B]
+    tril = jnp.tril(jnp.ones((BLOCK, BLOCK), bool), k=-1)
+    rank_wb = jnp.sum(eq & tril[None], axis=2)             # [t, B] i32
+    rank = rank_wb + jnp.take_along_axis(carry, k2, axis=1)
+    counts = jnp.sum(hist, axis=0)[:n_buckets]
+    return rank.reshape(-1)[:n].astype(jnp.int32), counts
+
+
+@partial(jax.jit, static_argnames=("n_buckets",))
+def radix_partition_rank_ref(keys: jnp.ndarray, n_buckets: int):
+    """keys: i32[N] in [0, n_buckets) -> (rank i32[N], counts i32[n_buckets]).
+
+    ``rank[i]`` = number of rows j < i with ``keys[j] == keys[i]`` (the
+    stable within-bucket rank); ``counts`` the key histogram.
+    """
+    if n_buckets <= SMALL_K_MAX:
+        return _rank_small(keys, n_buckets)
+    return _rank_blocked(keys, n_buckets)

@@ -1,0 +1,34 @@
+"""Shared kernel-runtime knobs.
+
+``default_interpret`` resolves whether a Pallas kernel runs in interpret
+mode.  Resolution order:
+
+1. ``JAX_PALLAS_INTERPRET`` environment variable, when set: truthy values
+   ("1", "true", "yes", "on") force interpret mode — this is how CI
+   exercises the *kernel bodies* (not just their jnp refs) on CPU
+   runners; falsy values ("0", "false", "no", "off") force compiled
+   dispatch.
+2. Otherwise: interpret everywhere except on a real TPU backend.
+
+Resolution happens when a wrapper *traces* (``interpret`` is a static
+jit argument), so a given input shape bakes the mode into its
+compilation-cache entry — flip the environment before the first call on
+a shape, not between calls.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+_TRUE = ("1", "true", "yes", "on")
+_FALSE = ("0", "false", "no", "off")
+
+
+def default_interpret() -> bool:
+    env = os.environ.get("JAX_PALLAS_INTERPRET", "").strip().lower()
+    if env in _TRUE:
+        return True
+    if env in _FALSE:
+        return False
+    return jax.default_backend() != "tpu"

@@ -1,7 +1,8 @@
 """Jit'd wrappers: pad to kernel tiling, dispatch, slice back.
 
 On a CPU host the kernel executes in interpret mode (Python emulation of the
-kernel body); on TPU set ``interpret=False`` (the default flips on backend).
+kernel body); on TPU set ``interpret=False`` (the default flips on backend,
+overridable via ``JAX_PALLAS_INTERPRET`` — see ``kernels/runtime``).
 """
 from __future__ import annotations
 
@@ -10,11 +11,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..runtime import default_interpret as _default_interpret
 from . import kernel as K
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _pad(x: jnp.ndarray, rows: int, lanes: int, fill) -> jnp.ndarray:

@@ -29,7 +29,7 @@ MESH2 = jax.make_mesh((2, 4), ("socket", "core"))
 
 def bit_identical(app_name, layout, mesh, *, n_events=128, interval=32,
                   slack=8.0, seed=11, cfg=None, mutate=None,
-                  gen_kwargs=None):
+                  gen_kwargs=None, cfg_ref=None):
     app = ALL_APPS[app_name]
     rng = np.random.default_rng(seed)
     stream = app.gen_events(rng, n_events, **(gen_kwargs or {}))
@@ -37,7 +37,7 @@ def bit_identical(app_name, layout, mesh, *, n_events=128, interval=32,
         mutate(stream)
     store = app.make_store()
     cfg = cfg or EngineConfig()
-    ref = DualModeEngine(app, store, cfg)
+    ref = DualModeEngine(app, store, cfg_ref or cfg)
     outs_r, vals_r = ref.run_stream(store.values, stream, interval,
                                     fused=True)
     eng = DualModeEngine(app, store, cfg, mesh=mesh, layout=layout,
@@ -132,6 +132,15 @@ def main():
     run("sl/residue", bit_identical, "sl", "shared_nothing", MESH1, seed=3,
         cfg=EngineConfig(scheme="tstream", max_dep_levels=0),
         mutate=overdraw, n_events=96, interval=24)
+    # radix-partition restructure backbone: the sharded driver forced onto
+    # the partition rung must match the lexsort single-device reference
+    # bit for bit (segscan fast path + gated lockstep path)
+    run("gs/partition_restructure", bit_identical, "gs", "shared_nothing",
+        MESH1, cfg=EngineConfig(restructure_method="partition"),
+        cfg_ref=EngineConfig(restructure_method="lexsort"))
+    run("sl/partition_restructure", bit_identical, "sl", "shared_nothing",
+        MESH1, cfg=EngineConfig(restructure_method="partition"),
+        cfg_ref=EngineConfig(restructure_method="lexsort"))
     # exchange-capacity overflow accounting + hash-probe routing
     run("overflow", check_overflow)
     run("hash_probe_route", check_probe_parity)

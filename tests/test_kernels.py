@@ -15,6 +15,9 @@ from repro.kernels.hash_probe import kernel as hpk
 from repro.kernels.hash_probe import ops as hpops
 from repro.kernels.hash_probe import ref as hpref
 
+# radix_partition kernel tests are deterministic and live in the ungated
+# tests/test_restructure_parity.py so coverage survives without hypothesis
+
 
 def _mk_segments(rng, n, avg_seg):
     flags = rng.random(n) < (1.0 / avg_seg)

@@ -1,0 +1,297 @@
+"""Radix-partition restructure vs the lexsort reference (deterministic).
+
+Every Chains field and sorted column must be **bit-identical** across
+backbones — the same correctness bar PRs 1-2 set for the fused/sharded
+drivers — swept over skewed/uniform key distributions, all-pad batches
+and single-chain degenerates.  Also pins the packed sort's 32-bit
+ceiling behavior (uint64 path under x64, warning + lexsort fallback
+without) and the fused-driver parity per app.  The hypothesis sweep
+lives in ``test_restructure_property.py``.
+"""
+import dataclasses
+import logging
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import ALL_APPS
+from repro.core.restructure import (commit_from_histogram, commit_index,
+                                    packed_sort_fits, restructure,
+                                    restructure_path, restructure_stream)
+from repro.core.scheduler import DualModeEngine, EngineConfig
+from repro.core.types import OpBatch
+
+from repro.kernels.radix_partition import ops as rpops
+from repro.kernels.radix_partition import ref as rpref
+
+CHAIN_FIELDS = ("order", "inv", "seg_start", "seg_id", "pos", "seg_end",
+                "n_chains", "max_len")
+OP_FIELDS = ("uid", "ts", "txn", "slot", "kind", "fun", "gate", "operand",
+             "valid")
+
+
+# ---------------------------------------------------------------------------
+# kernel-level: ref (both rungs) and Pallas kernel vs a numpy oracle
+# ---------------------------------------------------------------------------
+def _stable_rank_np(keys: np.ndarray, n_buckets: int):
+    """Numpy oracle: within-bucket stable rank + histogram."""
+    order = np.argsort(keys, kind="stable")
+    pos = np.empty(keys.shape[0], np.int64)
+    pos[order] = np.arange(keys.shape[0])
+    counts = np.bincount(keys, minlength=n_buckets)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    return pos - starts[keys], counts
+
+
+@pytest.mark.parametrize("n", [1, 7, 255, 256, 300, 2500, 40000])
+@pytest.mark.parametrize("n_buckets", [1, 3, 127, 128, 129, 1000, 2000])
+def test_radix_partition_rank_matches_oracle(n, n_buckets):
+    rng = np.random.default_rng(n * 7 + n_buckets)
+    keys = rng.integers(0, n_buckets, n).astype(np.int32)
+    r0, c0 = _stable_rank_np(keys, n_buckets)
+    # XLA counting ref (both the small-K transpose and blocked rungs)
+    r1, c1 = rpref.radix_partition_rank_ref(jnp.asarray(keys), n_buckets)
+    np.testing.assert_array_equal(np.asarray(r1), r0)
+    np.testing.assert_array_equal(np.asarray(c1), c0)
+    # Pallas kernel (interpret) when its bucket/row bounds hold
+    if rpops.kernel_fits(n_buckets, n) and n <= 3000:
+        r2, c2 = rpops.radix_partition_rank(jnp.asarray(keys), n_buckets,
+                                            use_pallas=True, interpret=True)
+        np.testing.assert_array_equal(np.asarray(r2), r0)
+        np.testing.assert_array_equal(np.asarray(c2), c0)
+
+
+def test_radix_partition_batched_single_dispatch():
+    """The (batch, blocks) grid re-initializes the carry per batch."""
+    rng = np.random.default_rng(0)
+    bn, n, k = 5, 700, 37
+    keys = rng.integers(0, k, (bn, n)).astype(np.int32)
+    rk, ck = rpops.radix_partition_rank(jnp.asarray(keys), k,
+                                        use_pallas=True, interpret=True)
+    rr, cr = rpops.radix_partition_rank(jnp.asarray(keys), k,
+                                        use_pallas=False)
+    for i in range(bn):
+        r0, c0 = _stable_rank_np(keys[i], k)
+        np.testing.assert_array_equal(np.asarray(rk)[i], r0)
+        np.testing.assert_array_equal(np.asarray(ck)[i], c0)
+        np.testing.assert_array_equal(np.asarray(rr)[i], r0)
+        np.testing.assert_array_equal(np.asarray(cr)[i], c0)
+
+
+def test_radix_partition_skewed_all_one_bucket():
+    keys = np.zeros((1000,), np.int32)
+    r, c = rpops.radix_partition_rank(jnp.asarray(keys), 16,
+                                      use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(r), np.arange(1000))
+    assert int(np.asarray(c)[0]) == 1000 and int(np.asarray(c)[1:].sum()) == 0
+
+
+def test_bucket_by_owner_backbones_identical():
+    """The exchange's counting and sort backbones (band-dispatched in
+    production, forceable via ``counting``) produce the same plan."""
+    from repro.core.ownership import bucket_by_owner
+    rng = np.random.default_rng(3)
+    dst = jnp.asarray(rng.integers(0, 9, 1000).astype(np.int32))
+    a = bucket_by_owner(dst, 8, 200, counting=True)
+    b = bucket_by_owner(dst, 8, 200, counting=False)
+    for f in ("take", "ok", "rank", "dst", "dropped"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+
+
+def test_kernel_fits_row_bound():
+    """The f32 rank-carry exactness bound routes oversized batches to the
+    XLA ref instead of silently rounding ranks."""
+    assert rpops.kernel_fits(64, 1000)
+    assert not rpops.kernel_fits(64, 1 << 24)
+    assert not rpops.kernel_fits(1 << 13, 1000)   # bucket VMEM bound
+
+
+def mk_batch(uid: np.ndarray, valid: np.ndarray, max_ops: int = 4) -> OpBatch:
+    """Row-major (ts, slot) batch around the given uid/valid columns."""
+    n = uid.shape[0]
+    idx = np.arange(n, dtype=np.int32)
+    rng = np.random.default_rng(n)
+    return OpBatch(
+        uid=jnp.asarray(uid.astype(np.int32)),
+        ts=jnp.asarray(idx // max_ops), txn=jnp.asarray(idx // max_ops),
+        slot=jnp.asarray(idx % max_ops),
+        kind=jnp.zeros((n,), jnp.int32),
+        fun=jnp.asarray(rng.integers(0, 3, n).astype(np.int32)),
+        gate=jnp.full((n,), -1, jnp.int32),
+        operand=jnp.asarray(rng.uniform(size=(n, 2)).astype(np.float32)),
+        valid=jnp.asarray(valid))
+
+
+def assert_partition_matches_lexsort(ops: OpBatch, pad_uid: int, *,
+                                     use_pallas: bool = False):
+    ref_s, ref_c = restructure(ops, pad_uid, rowmajor_ts=True,
+                               method="lexsort")
+    got_s, got_c = restructure(ops, pad_uid, rowmajor_ts=True,
+                               method="partition", use_pallas=use_pallas)
+    for f in CHAIN_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(got_c, f)),
+                                      np.asarray(getattr(ref_c, f)),
+                                      err_msg=f"Chains.{f}")
+    for f in OP_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(got_s, f)),
+                                      np.asarray(getattr(ref_s, f)),
+                                      err_msg=f"sorted.{f}")
+    # the partition histogram must reproduce the searchsorted commit map
+    p0, ok0 = commit_index(ref_s.uid, pad_uid + 1)
+    p1, ok1 = commit_from_histogram(got_c.counts, got_c.starts)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p0))
+    np.testing.assert_array_equal(np.asarray(ok1), np.asarray(ok0))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("n_slots,theta,pad_frac", [
+    (1, 0.0, 0.0), (7, 0.0, 0.1), (60, 0.6, 0.1), (300, 1.2, 0.5),
+    (13, 0.6, 0.9),
+])
+def test_partition_matches_lexsort(seed, n_slots, theta, pad_frac):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 60)) * 4
+    w = 1.0 / np.power(np.arange(1, n_slots + 1, dtype=np.float64), theta)
+    uid = rng.choice(n_slots, size=n, p=w / w.sum())
+    valid = rng.uniform(size=n) > pad_frac
+    assert_partition_matches_lexsort(mk_batch(uid, valid), n_slots)
+
+
+def test_all_pad_batch():
+    uid = np.zeros((24,), np.int32)
+    assert_partition_matches_lexsort(mk_batch(uid, np.zeros((24,), bool)), 7)
+
+
+def test_single_chain():
+    uid = np.full((40,), 3, np.int32)
+    assert_partition_matches_lexsort(mk_batch(uid, np.ones((40,), bool)), 9)
+
+
+def test_partition_kernel_path_matches():
+    rng = np.random.default_rng(11)
+    uid = rng.integers(0, 37, 513)
+    valid = rng.uniform(size=513) > 0.2
+    assert_partition_matches_lexsort(mk_batch(uid, valid), 37,
+                                     use_pallas=True)
+
+
+def test_restructure_stream_single_dispatch_matches_vmap():
+    """Batched partition (one kernel dispatch) == per-batch restructure."""
+    rng = np.random.default_rng(5)
+    n_i, n = 3, 256
+    uid = rng.integers(0, 13, (n_i, n)).astype(np.int32)
+    batches = [mk_batch(uid[i], rng.uniform(size=n) > 0.1)
+               for i in range(n_i)]
+    ops_all = OpBatch(*[jnp.stack([getattr(b, f.name) for b in batches])
+                        for f in dataclasses.fields(OpBatch)])
+    for use_pallas in (False, True):
+        sall, call = restructure_stream(ops_all, 13, rowmajor_ts=True,
+                                        method="partition",
+                                        use_pallas=use_pallas)
+        for i, b in enumerate(batches):
+            rs, rc = restructure(b, 13, rowmajor_ts=True, method="lexsort")
+            for f in CHAIN_FIELDS:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(call, f))[i],
+                    np.asarray(getattr(rc, f)), err_msg=f"[{i}].{f}")
+            np.testing.assert_array_equal(np.asarray(sall.uid)[i],
+                                          np.asarray(rs.uid))
+
+
+# ---------------------------------------------------------------------------
+# fused drivers: partition backbone is bit-identical to lexsort on all apps
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("app_name", ["gs", "tp", "sl", "ob"])
+def test_fused_driver_partition_vs_lexsort(app_name):
+    app = ALL_APPS[app_name]
+    rng = np.random.default_rng(7)
+    stream = app.gen_events(rng, 64)
+    store = app.make_store()
+    outs = {}
+    for method in ("partition", "lexsort"):
+        eng = DualModeEngine(app, store,
+                             EngineConfig(restructure_method=method))
+        outs[method] = eng.run_stream(store.values, stream, 16)
+    o_p, v_p = outs["partition"]
+    o_l, v_l = outs["lexsort"]
+    np.testing.assert_array_equal(np.asarray(v_p), np.asarray(v_l))
+    for a, b in zip(o_p, o_l):
+        for x, y in zip(jax.tree_util.tree_leaves(a),
+                        jax.tree_util.tree_leaves(b)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_auto_ladder_engages_partition_on_compact_store():
+    """Inside its measured regime (compact key space, large N) the auto
+    ladder resolves the partition rung and stays bit-identical."""
+    assert restructure_path(1 << 18, 15, rowmajor_ts=True) == "partition"
+    assert restructure_path(1 << 10, 15, rowmajor_ts=True) == "packed"
+    assert restructure_path(1 << 18, 500, rowmajor_ts=True) == "packed"
+    rng = np.random.default_rng(9)
+    n = 1 << 18
+    ops = mk_batch(rng.integers(0, 15, n), rng.uniform(size=n) > 0.1)
+    sa, ca = restructure(ops, 15, rowmajor_ts=True)          # auto
+    assert ca.counts is not None, "auto did not take the partition rung"
+    sl, cl = restructure(ops, 15, rowmajor_ts=True, method="lexsort")
+    for f in CHAIN_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(ca, f)),
+                                      np.asarray(getattr(cl, f)),
+                                      err_msg=f"Chains.{f}")
+    np.testing.assert_array_equal(np.asarray(sa.uid), np.asarray(sl.uid))
+
+
+# ---------------------------------------------------------------------------
+# packed-sort 32-bit ceiling (satellite): uint64 path / explicit fallback
+# ---------------------------------------------------------------------------
+def test_packed_sort_fits_bits():
+    assert packed_sort_fits(1 << 19, 10_000, bits=32) is False
+    assert packed_sort_fits(1 << 19, 10_000, bits=64) is True
+    assert packed_sort_fits(1 << 10, 10_000, bits=32) is True
+
+
+def test_path_warns_and_falls_back_without_x64(caplog):
+    with caplog.at_level(logging.WARNING, logger="repro.core.restructure"):
+        path = restructure_path(1 << 19, 10_000, rowmajor_ts=True)
+    assert path == "lexsort"
+    assert any("packed-uint64" in r.message for r in caplog.records)
+
+
+def test_forced_partition_requires_rowmajor():
+    with pytest.raises(ValueError, match="rowmajor_ts"):
+        restructure_path(128, 7, rowmajor_ts=False, method="partition")
+
+
+def test_packed_sort_uint64_subprocess():
+    """With x64 enabled, the >32-bit pack takes the uint64 path and stays
+    bit-identical to the stable-sort reference (subprocess: x64 is
+    process-global)."""
+    code = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from repro.core.restructure import packed_stable_sort, packed_sort_fits
+n, m = 1 << 19, 10_000
+assert not packed_sort_fits(n, m, bits=32)
+rng = np.random.default_rng(0)
+major = jnp.asarray(rng.integers(0, m + 1, n).astype(np.int32))
+order, major_s, pos = packed_stable_sort(major, m)
+ref = np.argsort(np.asarray(major), kind="stable")
+np.testing.assert_array_equal(np.asarray(order), ref)
+np.testing.assert_array_equal(np.asarray(major_s), np.asarray(major)[ref])
+inv = np.empty(n, np.int64); inv[ref] = np.arange(n)
+np.testing.assert_array_equal(np.asarray(pos), inv)
+print("u64 ok")
+"""
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "u64 ok" in out.stdout

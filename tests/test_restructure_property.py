@@ -1,0 +1,43 @@
+"""Hypothesis sweep: radix-partition restructure == lexsort reference.
+
+Random skewed/uniform key distributions, pad fractions up to all-pad, and
+tiny-to-mid batch shapes; every Chains field, sorted column and the
+histogram commit map must be bit-identical (the shared assertion lives in
+``test_restructure_parity``, which also carries the deterministic edge
+cases so coverage survives without hypothesis installed).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from test_restructure_parity import assert_partition_matches_lexsort, mk_batch
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_txn=st.integers(1, 50),
+       max_ops=st.integers(1, 5), n_slots=st.integers(1, 60),
+       theta=st.sampled_from([0.0, 0.6, 1.2]),
+       pad_frac=st.sampled_from([0.0, 0.1, 0.9, 1.0]))
+def test_partition_matches_lexsort_property(seed, n_txn, max_ops, n_slots,
+                                            theta, pad_frac):
+    rng = np.random.default_rng(seed)
+    n = n_txn * max_ops
+    w = 1.0 / np.power(np.arange(1, n_slots + 1, dtype=np.float64), theta)
+    uid = rng.choice(n_slots, size=n, p=w / w.sum())
+    valid = rng.uniform(size=n) >= pad_frac
+    assert_partition_matches_lexsort(mk_batch(uid, valid, max_ops), n_slots)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 700),
+       n_slots=st.integers(1, 2100))
+def test_partition_kernel_property(seed, n, n_slots):
+    """Pallas kernel rung (interpret) across shapes incl. multi-block."""
+    rng = np.random.default_rng(seed)
+    uid = rng.integers(0, n_slots, n)
+    valid = rng.uniform(size=n) > 0.15
+    assert_partition_matches_lexsort(mk_batch(uid, valid), n_slots,
+                                     use_pallas=True)

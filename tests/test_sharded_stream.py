@@ -53,6 +53,7 @@ def worker_verdicts():
     "ob/shared_nothing", "gs/shared_per_socket", "tp/shared_per_socket",
     "gs/shared_everything", "tp/shared_everything", "gs/skew",
     "gs/multipartition", "sl/abort_repass", "sl/residue",
+    "gs/partition_restructure", "sl/partition_restructure",
 ])
 def test_sharded_bit_identical(worker_verdicts, case):
     v = worker_verdicts[case]
