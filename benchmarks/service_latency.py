@@ -1,0 +1,100 @@
+"""Measured service latency — supersedes the modeled Fig. 13.
+
+The old fig13 rows *model* p99 latency from the executor cost model
+(``p99 ≈ 0.99·fill + batch``); this module **measures** per-event
+end-to-end latency through the continuous service runtime
+(DESIGN.md §2.6): enqueue timestamp at arrival admission → interval-commit
+timestamp after post-processing + D2H.  Rows report p50/p99 per
+(app, scheme, interval) plus the sustained service throughput next to the
+batch fused driver's throughput on the same events (the acceptance bar:
+steady state within 10% of the batch driver at interval 512).  Service
+and batch runs are **interleaved** and summarized by their best
+iteration, the same A/B protocol as ``stream_wall_time_pair``
+(DESIGN.md §8.3) — machine-load drift lands on both sides equally.  The
+superseded modeled fig13 rows are re-emitted side-by-side
+(``driver="modeled"``).  Lands in ``BENCH_service.json`` via
+``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.apps import ALL_APPS
+from repro.core.intervals import ReplaySource, WatermarkPolicy
+from repro.core.scheduler import DualModeEngine, EngineConfig
+from repro.runtime.service import ServiceConfig, StreamService
+
+
+def _cases(quick: bool, smoke: bool):
+    # (app, scheme, interval, n_intervals, chunk)
+    if smoke:   # CI bit-rot canary
+        return [("gs", "tstream", 64, 8, 4)]
+    if quick:
+        return [
+            # acceptance case: enough intervals that the pipeline fill /
+            # drain edges amortize out of the steady-state measurement
+            ("gs", "tstream", 512, 64, 8),
+            ("gs", "tstream", 128, 64, 8),
+            ("tp", "tstream", 512, 32, 8),
+            ("sl", "tstream", 256, 24, 8),   # gated lockstep path
+            ("gs", "mvlk", 256, 24, 8),
+        ]
+    return [(a, s, i, 48, 8) for a in ALL_APPS for s in ("tstream", "mvlk")
+            for i in (128, 512, 1024)]
+
+
+def run(quick: bool = True, smoke: bool = False):
+    rows = []
+    iters = 2 if smoke else 7
+    for app_name, scheme, interval, n_intervals, chunk in _cases(quick,
+                                                                 smoke):
+        app = ALL_APPS[app_name]
+        n_events = interval * n_intervals
+        jitter = max(1, interval // 8)
+        mk = lambda: ReplaySource(app.gen_events, n_events, seed=23,
+                                  arrival_batch=interval, jitter=jitter)
+        store = app.make_store()
+        eng = DualModeEngine(app, store, EngineConfig(scheme=scheme))
+        svc = StreamService(eng, ServiceConfig(
+            punct_interval=interval, chunk_intervals=chunk,
+            queue_intervals=2 * chunk,
+            watermark=WatermarkPolicy(allowed_lateness=jitter)))
+        batch_events = mk().in_order_events
+
+        def batch_once():
+            t0 = time.perf_counter()
+            outs, vals = eng.run_stream(store.values, batch_events, interval,
+                                        fused=True)
+            jax.block_until_ready(vals)
+            return time.perf_counter() - t0
+
+        svc.run(mk())                   # warm the chunk compilations
+        batch_once()                    # warm the monolithic compilation
+        best_rec, best_eps, batch_best_s = None, 0.0, float("inf")
+        for _ in range(iters):          # interleaved A/B
+            rec = svc.run(mk())
+            eps = rec.sustained_events_per_s()
+            if eps > best_eps:
+                best_rec, best_eps = rec, eps
+            batch_best_s = min(batch_best_s, batch_once())
+        pct = best_rec.latency_percentiles((50, 99))
+        batch_eps = n_events / batch_best_s
+        rows.append(dict(
+            fig="service", driver="service", app=app_name, scheme=scheme,
+            interval=interval, n_events=n_events, chunk_intervals=chunk,
+            p50_latency_s=pct["p50"], p99_latency_s=pct["p99"],
+            events_per_s=best_eps, batch_events_per_s=batch_eps,
+            service_vs_batch=best_eps / batch_eps,
+            late_rerouted=best_rec.stats["late_rerouted"],
+            drops=best_rec.stats["drops"],
+        ))
+    if not smoke:
+        # the superseded modeled rows, side-by-side for comparison
+        from .fig13_latency import run as modeled_run
+        for r in modeled_run(quick=quick):
+            rows.append(dict(r, fig="service", driver="modeled",
+                             interval=500))
+    return rows

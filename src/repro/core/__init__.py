@@ -5,6 +5,8 @@ restructuring execution (D2) — implemented as data-parallel JAX.
 """
 from .blotter import AppSpec, Blotter, build_opbatch
 from .engines import SCHEMES, EngineStats, evaluate
+from .intervals import (IntervalAssembler, IntervalInfo, ReplaySource,
+                        WatermarkPolicy)
 from .ownership import LAYOUTS, Ownership, build_ownership, make_local_store
 from .restructure import Chains, restructure
 from .scheduler import DualModeEngine, EngineConfig

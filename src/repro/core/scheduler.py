@@ -153,6 +153,34 @@ class DualModeEngine:
         return [jax.tree_util.tree_map(lambda x, i=i: x[i], outs)
                 for i in range(n_intervals)]
 
+    # -- chunked service API (runtime/service.py; DESIGN.md §2.6) ----------
+    def run_stream_chunk(self, values, batched, ts0: int):
+        """One device-resident chunk of a continuous run.
+
+        ``batched`` leaves are ``[K, interval, ...]`` **device** arrays and
+        ``values`` is DONATED: the caller owns the buffer and threads the
+        returned carry into the next chunk, so K-chunked execution scans
+        the same per-interval schedule as one monolithic ``run_stream``
+        over the concatenated events (bit-identity pinned in
+        tests/test_service.py).  ``ts0`` is the global timestamp base of
+        the chunk's first interval (= global interval index × interval).
+
+        Returns ``(res_all, ebs_all, values', exchange_stats)`` as
+        *unmaterialized* device arrays — nothing blocks, so the caller can
+        stage and dispatch chunk *i+1* while chunk *i* still runs
+        (``exchange_stats`` is None off the sharded driver).  Materialize
+        per-interval outputs later via :meth:`post_outputs`.
+        """
+        if self._sharded is not None:
+            return self._sharded.run_chunk(values, batched, ts0)
+        res_all, ebs_all, values, _ = self._fused(values, batched,
+                                                  jnp.int32(ts0))
+        return res_all, ebs_all, values, None
+
+    def post_outputs(self, res_all, ebs_all, n_intervals: int):
+        """Materialize a chunk's per-interval outputs (blocks on D2H)."""
+        return self._outs(res_all, ebs_all, n_intervals)
+
 
 def _batches(stream: Dict[str, np.ndarray], interval: int):
     n = len(next(iter(stream.values())))

@@ -175,6 +175,17 @@ class ShardedStream:
         return ([jax.tree_util.tree_map(lambda x, i=i: x[i], outs)
                  for i in range(n_intervals)], values)
 
+    def run_chunk(self, values, batched, ts0: int):
+        """Chunked service entry (see ``DualModeEngine.run_stream_chunk``).
+
+        ``values`` is donated and ``batched`` leaves are
+        ``[K, interval, ...]``; returns unmaterialized device arrays plus
+        the per-chunk exchange stats ``dict`` (dropped/shipped per
+        interval) for the caller to aggregate — overflow is NOT logged
+        here: the service logs each drop category once per run.
+        """
+        return self._impl(values, batched, jnp.int32(ts0))
+
 
 # ---------------------------------------------------------------------------
 # the jitted whole-stream program

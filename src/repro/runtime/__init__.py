@@ -1,2 +1,3 @@
 from .ft import TrainLoop, TrainLoopConfig
+from .service import ServiceConfig, ServiceRun, StreamService
 from .straggler import StragglerPolicy, ShardDispatcher

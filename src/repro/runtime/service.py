@@ -1,0 +1,409 @@
+"""Continuous streaming service runtime (DESIGN.md §2.6).
+
+``StreamService`` turns the batch-replay drivers into a steady-state
+pipeline over an unbounded arrival source:
+
+    arrivals -> admission (bounded queue) -> IntervalAssembler (watermark)
+             -> ready intervals -> chunked fused scan (K intervals per
+             dispatch, state carry donated chunk-to-chunk)
+             -> commit (post-process + D2H) -> outputs + latency record
+
+* **Double-buffered device feed**: chunks are dispatched and committed in
+  order on a dedicated executor thread while the main thread pulls,
+  assembles and stages (H2D) the next chunk — XLA releases the GIL
+  during execution, so interval *i+1*'s transfer and compute-mode
+  pre-processing overlap interval *i*'s state-access scan on every
+  backend (``run_stream_chunk`` itself returns unmaterialized device
+  arrays; the executor blocks on chunk *i*'s outputs only after chunk
+  *i+1* is in flight).
+* **Chunked == monolithic**: chunk boundaries are punctuation boundaries
+  and the carry is the donated state buffer, so K-chunked execution is
+  bit-identical to one ``run_stream`` over the same events, on both the
+  single-device and sharded drivers (pinned in tests/test_service.py and
+  tests/service_worker.py).
+* **Backpressure / admission control**: the ready queue is bounded
+  (``queue_intervals``); when the source outruns the engine the service
+  either stops pulling (``admission="block"``) or drops whole arrival
+  batches with accounting (``admission="drop"``).
+* **Punctuation-aligned recovery**: every ``snapshot_every`` intervals
+  the service drains the pipeline and writes the state buffer through
+  ``ckpt/`` (the checkpoint step number IS the punctuation index).
+  Recovery restores the snapshot and replays the deterministic source,
+  discarding the first ``intervals_done`` re-assembled intervals — the
+  resumed run is bitwise identical to an uninterrupted one.
+
+``StreamService.stats`` is the one merged accounting record: watermark
+drops, admission drops and sharded exchange overflow land in a single
+structured dict and each category is logged at most once per run.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import json
+import logging
+import os
+import queue
+import threading
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import latest_step, load_checkpoint, save_checkpoint
+from repro.core.intervals import IntervalAssembler, WatermarkPolicy
+
+log = logging.getLogger(__name__)
+
+
+def ts_base_for(global_interval: int, interval: int) -> int:
+    """int32-safe timestamp base for an unbounded run.
+
+    Engine timestamps are only meaningful *within* one punctuation
+    interval's restructure sort (nothing persists them across intervals),
+    so the base wraps at an interval-aligned boundary below 2**30 —
+    within any chunk the bases stay monotone and the per-op ``ts_base +
+    arange(interval)`` stays well inside int32 forever.  Below the wrap
+    (~2**30 events) this equals ``global_interval * interval`` exactly,
+    which is what the chunked-vs-monolithic bit-identity tests compare.
+    """
+    wrap = max(1, 2 ** 30 // interval)
+    return (global_interval % wrap) * interval
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    punct_interval: int
+    chunk_intervals: int = 4        # K — scan window per device dispatch
+    queue_intervals: int = 16       # ready-queue bound (admission control)
+    admission: str = "block"        # "block" (backpressure) | "drop"
+    watermark: WatermarkPolicy = WatermarkPolicy()
+    snapshot_every: int = 0         # intervals between snapshots; 0 = off
+    ckpt_dir: Optional[str] = None
+
+    def __post_init__(self):
+        assert self.punct_interval > 0
+        assert self.chunk_intervals > 0
+        assert self.admission in ("block", "drop"), self.admission
+        assert self.queue_intervals >= self.chunk_intervals, \
+            "queue_intervals must cover at least one chunk"
+        if self.snapshot_every:
+            assert self.snapshot_every % self.chunk_intervals == 0, \
+                ("snapshots are taken at chunk boundaries: snapshot_every "
+                 "must be a multiple of chunk_intervals")
+            assert self.ckpt_dir, "snapshot_every needs a ckpt_dir"
+            # admission drops depend on ready-queue occupancy, and replay
+            # (skip_intervals) bypasses the queue for the skipped prefix —
+            # a dropping queue is therefore not replayable and would break
+            # the crash -> restore -> replay bit-identity guarantee
+            assert self.admission == "block", \
+                "snapshot/recovery requires admission='block'"
+
+
+@dataclasses.dataclass
+class ServiceRun:
+    """Mutable record of one service run (kept on ``service.last_run`` so
+    a crashed run's committed prefix stays inspectable)."""
+
+    outputs: List = dataclasses.field(default_factory=list)   # per interval
+    commits: List[Dict] = dataclasses.field(default_factory=list)
+    latencies: List[np.ndarray] = dataclasses.field(default_factory=list)
+    snapshots: List[int] = dataclasses.field(default_factory=list)
+    admission_dropped: int = 0
+    replayed_intervals: int = 0
+    exchange_dropped: int = 0
+    exchange_shipped: int = 0
+    exchange_capacity: int = 0
+    t_first_enqueue: Optional[float] = None
+    t_last_commit: Optional[float] = None
+    final_values: Optional[np.ndarray] = None
+    stats: Optional[Dict] = None
+
+    def latency_s(self) -> np.ndarray:
+        """Per-event end-to-end latency (enqueue -> interval commit)."""
+        if not self.latencies:
+            return np.zeros((0,), np.float64)
+        return np.concatenate(self.latencies)
+
+    def latency_percentiles(self, qs=(50, 99)) -> Dict[str, float]:
+        lat = self.latency_s()
+        if lat.size == 0:
+            return {f"p{q}": float("nan") for q in qs}
+        return {f"p{q}": float(np.percentile(lat, q)) for q in qs}
+
+    def sustained_events_per_s(self) -> float:
+        n = sum(len(l) for l in self.latencies)
+        if not n or self.t_first_enqueue is None \
+                or self.t_last_commit is None:
+            return 0.0
+        span = self.t_last_commit - self.t_first_enqueue
+        return n / span if span > 0 else 0.0
+
+
+class StreamService:
+    """Long-running punctuation pipeline over a ``DualModeEngine``."""
+
+    def __init__(self, engine, cfg: ServiceConfig):
+        self.engine = engine
+        self.cfg = cfg
+        if engine._sharded is not None:
+            assert cfg.punct_interval % engine._sharded.n_dev == 0, \
+                (f"punct_interval={cfg.punct_interval} must divide evenly "
+                 f"across {engine._sharded.n_dev} devices")
+        self.last_run: Optional[ServiceRun] = None
+
+    # ------------------------------------------------------------------
+    def run(self, source, values=None, *, skip_intervals: int = 0,
+            max_intervals: Optional[int] = None,
+            crash_after_interval: Optional[int] = None) -> ServiceRun:
+        """Drive the service until the source drains (or ``max_intervals``).
+
+        ``skip_intervals`` is the recovery path: the first N re-assembled
+        intervals are discarded without execution (the snapshot already
+        contains their effects) and execution resumes at global interval
+        index N with the restored state — assembly is deterministic, so
+        the continuation is bitwise identical to the uninterrupted run.
+        ``crash_after_interval`` injects a failure once the interval with
+        that global index has committed (tests/CI restart drill).
+        """
+        cfg, eng = self.cfg, self.engine
+        if skip_intervals and cfg.admission != "block":
+            raise ValueError(
+                "replay (skip_intervals) requires admission='block': a "
+                "dropping queue makes the arrival->interval mapping depend "
+                "on commit progress, which replay does not reproduce")
+        interval, K = cfg.punct_interval, cfg.chunk_intervals
+        asm = IntervalAssembler(interval, cfg.watermark)
+        ready = collections.deque()
+        in_flight = collections.deque()
+        rec = ServiceRun()
+        self.last_run = rec
+        init = eng.init_store.values if values is None else values
+        vals = jnp.array(init, copy=True)
+        src = iter(source)
+        state = dict(exhausted=False, to_skip=int(skip_intervals), err=None)
+        g_next = int(skip_intervals)    # global index of next interval
+        executed = 0                    # intervals submitted this run
+        # staged chunks queued for the executor thread; maxsize=1 plus the
+        # executor's depth-2 in_flight window bounds the pipeline
+        work_q: queue.Queue = queue.Queue(maxsize=1)
+
+        def drain_asm():
+            for ev_iv, info in asm.pop_ready():
+                if state["to_skip"] > 0:
+                    state["to_skip"] -= 1
+                    rec.replayed_intervals += 1
+                else:
+                    ready.append((ev_iv, info))
+
+        def pull_one() -> bool:
+            """Admit one arrival batch; False = backpressure (queue full)."""
+            if state["exhausted"]:
+                return False
+            if len(ready) >= cfg.queue_intervals and cfg.admission == "block":
+                return False
+            try:
+                ev, t = next(src)
+            except StopIteration:
+                state["exhausted"] = True
+                asm.close()
+            else:
+                if len(ready) >= cfg.queue_intervals:   # admission == "drop"
+                    rec.admission_dropped += int(np.asarray(t).shape[0])
+                else:
+                    now = time.perf_counter()
+                    if rec.t_first_enqueue is None:
+                        rec.t_first_enqueue = now
+                    asm.push(ev, t, enqueue_s=now)
+            drain_asm()
+            return True
+
+        def commit_oldest():
+            g0, kk, res, ebs, infos, xst = in_flight.popleft()
+            outs = eng.post_outputs(res, ebs, kk)
+            t_commit = time.perf_counter()
+            rec.t_last_commit = t_commit
+            if xst is not None:
+                st = jax.device_get(xst)
+                rec.exchange_dropped += int(np.sum(st["dropped"]))
+                rec.exchange_shipped += int(np.sum(st["shipped"]))
+                rec.exchange_capacity = int(st["capacity"])
+            for i in range(kk):
+                info = infos[i]
+                rec.outputs.append(outs[i])
+                rec.latencies.append(t_commit - info.enqueue_s)
+                rec.commits.append(dict(
+                    interval=g0 + i, commit_s=t_commit,
+                    watermark=int(info.watermark), n_late=int(info.n_late)))
+            if crash_after_interval is not None \
+                    and g0 + kk - 1 >= crash_after_interval:
+                raise RuntimeError(
+                    f"injected failure after interval {g0 + kk - 1}")
+
+        def dispatch(batched, kk: int, infos):
+            nonlocal vals, g_next
+            res, ebs, vals, xst = eng.run_stream_chunk(
+                vals, batched, ts_base_for(g_next, interval))
+            in_flight.append((g_next, kk, res, ebs, infos, xst))
+            g_next += kk
+            # double buffer depth 2: block on the oldest chunk only once a
+            # newer one is in flight (its assembly/H2D already overlapped)
+            while len(in_flight) > 1:
+                commit_oldest()
+            if cfg.snapshot_every and g_next % cfg.snapshot_every == 0:
+                # punctuation-aligned snapshot: drain the pipe so the carry
+                # is this boundary's state, then publish through ckpt/
+                while in_flight:
+                    commit_oldest()
+                host_vals = np.asarray(jax.device_get(vals))
+                save_checkpoint(
+                    cfg.ckpt_dir, g_next, dict(values=host_vals),
+                    extra_meta=dict(intervals_done=g_next,
+                                    punct_interval=interval))
+                rec.snapshots.append(g_next)
+
+        def executor():
+            """Chunk executor thread: dispatch/commit strictly in order so
+            the donated state carry chains exactly as the monolithic scan's
+            would.  Running it off the main thread is what makes the feed
+            double-buffered on every backend: XLA releases the GIL during
+            execution, so the main thread assembles and stages chunk i+1
+            while chunk i computes."""
+            try:
+                while True:
+                    item = work_q.get()
+                    if item is None:
+                        break
+                    dispatch(*item)
+                while in_flight:
+                    commit_oldest()
+            except BaseException as e:
+                state["err"] = e
+                try:                    # unblock the producer
+                    while True:
+                        work_q.get_nowait()
+                except queue.Empty:
+                    pass
+
+        worker = threading.Thread(target=executor, daemon=True,
+                                  name="stream-service-executor")
+        worker.start()
+
+        def submit(kk: int):
+            nonlocal executed
+            chunk = [ready.popleft() for _ in range(kk)]
+            # count at pop time: a chunk stranded by a crash (in work_q,
+            # in_flight, or aborted here) is executed-but-uncommitted and
+            # must land in the stats as unprocessed, not vanish
+            executed += kk
+            batched = {k: jnp.asarray(np.stack([c[0][k] for c in chunk]))
+                       for k in chunk[0][0]}
+            item = (batched, kk, [c[1] for c in chunk])
+            while state["err"] is None:
+                try:
+                    work_q.put(item, timeout=0.05)
+                    return
+                except queue.Full:
+                    continue
+
+        try:
+            while state["err"] is None:
+                # admission: a "drop" source never waits — one arrival
+                # batch is admitted (or dropped at the full queue) per
+                # dispatch cycle, modelling an arrival rate the service
+                # cannot defer; a "block" source is backpressured: pulled
+                # only while the next chunk is still short.
+                if cfg.admission == "drop" and not state["exhausted"]:
+                    pull_one()
+                while not state["exhausted"] and len(ready) < K:
+                    if not pull_one():
+                        break
+                room = (K if max_intervals is None
+                        else max(0, int(max_intervals) - executed))
+                kk = min(K, len(ready), room)
+                if kk == 0:
+                    break
+                submit(kk)
+        finally:
+            # always shut the executor down — even when the source raised —
+            # so no run leaks a thread blocked on the work queue
+            if state["err"] is None:
+                work_q.put(None)
+            worker.join()
+        stranded = max(0, executed - len(rec.outputs))
+        if state["err"] is not None:
+            self._finish(rec, asm, ready, crashed=True, stranded=stranded)
+            raise state["err"]
+
+        rec.final_values = np.asarray(jax.device_get(vals))
+        self._finish(rec, asm, ready, crashed=False, stranded=stranded)
+        return rec
+
+    def resume(self, source, **run_kwargs) -> ServiceRun:
+        """Restore the latest punctuation-aligned snapshot and replay."""
+        cfg = self.cfg
+        assert cfg.ckpt_dir, "resume needs a ckpt_dir"
+        last = latest_step(cfg.ckpt_dir)
+        if last is None:
+            raise FileNotFoundError(f"no snapshot under {cfg.ckpt_dir}")
+        restored = load_checkpoint(
+            cfg.ckpt_dir, last,
+            dict(values=self.engine.init_store.values))
+        with open(os.path.join(cfg.ckpt_dir, f"step_{last:08d}",
+                               "manifest.json")) as f:
+            meta = json.load(f)["meta"]
+        assert meta["punct_interval"] == cfg.punct_interval, \
+            "snapshot was taken at a different punctuation interval"
+        return self.run(source, values=restored["values"],
+                        skip_intervals=int(meta["intervals_done"]),
+                        **run_kwargs)
+
+    # ------------------------------------------------------------------
+    @property
+    def stats(self) -> Optional[Dict]:
+        return self.last_run.stats if self.last_run else None
+
+    def _finish(self, rec: ServiceRun, asm: IntervalAssembler, ready,
+                crashed: bool, stranded: int = 0):
+        interval = self.cfg.punct_interval
+        unprocessed = (len(ready) + stranded) * interval + asm.pending
+        rec.stats = dict(
+            arrived=asm.arrived + rec.admission_dropped,
+            processed=len(rec.outputs) * interval,
+            replayed=rec.replayed_intervals * interval,
+            late_rerouted=asm.late_rerouted,
+            drops=dict(watermark=asm.watermark_dropped,
+                       admission=rec.admission_dropped,
+                       exchange=rec.exchange_dropped),
+            unprocessed=unprocessed,
+            snapshots=list(rec.snapshots),
+            watermark=int(asm.watermark),
+            crashed=crashed,
+        )
+        if self.engine._sharded is not None:
+            rec.stats["exchange"] = dict(
+                dropped=rec.exchange_dropped,
+                shipped=rec.exchange_shipped,
+                capacity=rec.exchange_capacity)
+        if not crashed:
+            self._log_once(rec.stats)
+
+    @staticmethod
+    def _log_once(stats: Dict):
+        """One line per nonzero drop category per run — never per interval."""
+        drops = stats["drops"]
+        if drops["watermark"]:
+            log.warning("watermark policy dropped %d late events this run",
+                        drops["watermark"])
+        if drops["admission"]:
+            log.warning("admission control dropped %d events at the full "
+                        "queue this run", drops["admission"])
+        if drops["exchange"]:
+            log.warning("sharded exchange overflow dropped %d ops this run "
+                        "(capacity=%d/bucket) — raise exchange_slack",
+                        drops["exchange"], stats["exchange"]["capacity"])
+        if stats["late_rerouted"]:
+            log.info("%d late events rerouted into later intervals this run",
+                     stats["late_rerouted"])

@@ -1,0 +1,154 @@
+"""Hypothesis sweep: watermarked interval assembly (DESIGN.md §2.6).
+
+Random arrival jitter, duplicate timestamps, bursty arrival batch sizes
+and both late policies, against three invariants:
+
+* **conservation** — every arrived row is emitted exactly once, counted
+  dropped, or still pending; no row is duplicated or lost;
+* **watermark monotonicity** — the per-interval watermark sequence never
+  decreases (and the live watermark tracks max(event_time) - lateness);
+* **bit-identity** — when jitter stays within the lateness window the
+  assembler reproduces the exact in-order stream, and the K-chunked
+  engine over that assembly equals the monolithic ``run_stream`` bitwise
+  (the engine-level pin, on a tiny GS instance).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.intervals import (IntervalAssembler, ReplaySource,
+                                  WatermarkPolicy)
+
+
+def _arrival_stream(rng, n, jitter, dupes):
+    """(payload ids, event times) in a jitter-bounded arrival order."""
+    t = np.arange(n, dtype=np.int64)
+    if dupes:
+        t = t // 3  # duplicate timestamps (bursts at one event time)
+    order = (np.argsort(t + rng.uniform(0.0, float(jitter), n),
+                        kind="stable") if jitter else np.arange(n))
+    return np.arange(n, dtype=np.int64)[order], t[order]
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 300),
+       interval=st.integers(1, 16), jitter=st.integers(0, 40),
+       lateness=st.integers(0, 40), dupes=st.booleans(),
+       late=st.sampled_from(["reroute", "drop"]))
+def test_conservation_and_watermark_monotonic(seed, n, interval, jitter,
+                                              lateness, dupes, late):
+    rng = np.random.default_rng(seed)
+    ids, times = _arrival_stream(rng, n, jitter, dupes)
+    asm = IntervalAssembler(interval, WatermarkPolicy(
+        allowed_lateness=lateness, late=late))
+    emitted_ids, emitted_seqs = [], []
+
+    def drain():
+        for ev, info in asm.pop_ready():
+            emitted_ids.append(ev["id"])
+            emitted_seqs.append(info.seq)
+            assert ev["id"].shape == (interval,)
+
+    # bursty arrival batches: random split points, pops interleaved
+    cuts = np.sort(rng.integers(0, n + 1, rng.integers(0, 8)))
+    for lo, hi in zip(np.r_[0, cuts], np.r_[cuts, n]):
+        if hi > lo:
+            asm.push(dict(id=ids[lo:hi]), times[lo:hi])
+            if rng.random() < 0.5:
+                drain()
+    asm.close()
+    drain()
+
+    # conservation: emitted exactly once + dropped + pending == arrived
+    assert asm.conservation_ok()
+    got = (np.concatenate(emitted_ids) if emitted_ids
+           else np.zeros((0,), np.int64))
+    assert got.size == asm.assembled
+    assert np.unique(got).size == got.size, "a row was emitted twice"
+    assert asm.arrived == n
+    assert asm.assembled + asm.watermark_dropped + asm.pending == n
+    assert asm.pending < interval  # close() seals everything emittable
+    if late == "reroute":
+        assert asm.watermark_dropped == 0
+    # arrival sequences are globally unique across intervals too
+    if emitted_seqs:
+        seqs = np.concatenate(emitted_seqs)
+        assert np.unique(seqs).size == seqs.size
+
+    # watermark monotonicity
+    wms = np.asarray(asm.watermarks)
+    assert np.all(np.diff(wms) >= 0)
+    assert asm.watermark == int(times.max()) - lateness
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 300),
+       interval=st.integers(1, 16), jitter=st.integers(0, 20),
+       slack=st.integers(0, 10), batch=st.integers(1, 64))
+def test_in_window_jitter_reassembles_exact_order(seed, n, interval, jitter,
+                                                  slack, batch):
+    """jitter <= allowed_lateness + unique times => the emitted stream is
+    the exact in-order stream (no drops, no reroutes) — the assembly-level
+    foundation of the service's chunked-vs-monolithic bit-identity."""
+    rng = np.random.default_rng(seed)
+    ids, times = _arrival_stream(rng, n, jitter, dupes=False)
+    asm = IntervalAssembler(interval, WatermarkPolicy(
+        allowed_lateness=jitter + slack))
+    out = []
+    for lo in range(0, n, batch):
+        asm.push(dict(id=ids[lo : lo + batch]), times[lo : lo + batch])
+        out.extend(ev["id"] for ev, _ in asm.pop_ready())
+    asm.close()
+    out.extend(ev["id"] for ev, _ in asm.pop_ready())
+    assert asm.watermark_dropped == 0 and asm.late_rerouted == 0
+    got = np.concatenate(out) if out else np.zeros((0,), np.int64)
+    k = n // interval
+    np.testing.assert_array_equal(got, np.arange(k * interval))
+
+
+# ---------------------------------------------------------------------------
+# engine-level chunked-vs-monolithic bit-identity under random arrivals
+# ---------------------------------------------------------------------------
+_ENGINE_CACHE = {}
+
+
+def _tiny_gs():
+    if "eng" not in _ENGINE_CACHE:
+        from repro.apps import ALL_APPS
+        from repro.core.scheduler import DualModeEngine, EngineConfig
+        app = ALL_APPS["gs"]
+        store = app.make_store()
+        _ENGINE_CACHE["app"] = app
+        _ENGINE_CACHE["store"] = store
+        _ENGINE_CACHE["eng"] = DualModeEngine(app, store, EngineConfig())
+        _ENGINE_CACHE["refs"] = {}
+    return (_ENGINE_CACHE["app"], _ENGINE_CACHE["store"],
+            _ENGINE_CACHE["eng"], _ENGINE_CACHE["refs"])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), chunk=st.integers(1, 3),
+       jitter=st.integers(0, 6), batch=st.sampled_from([7, 16, 48]))
+def test_chunked_engine_matches_monolithic_property(seed, chunk, jitter,
+                                                    batch):
+    from repro.core.scheduler import DualModeEngine  # noqa: F401 (cache)
+    from repro.runtime.service import ServiceConfig, StreamService
+    app, store, eng, refs = _tiny_gs()
+    src = ReplaySource(app.gen_events, 48, seed=seed, arrival_batch=batch,
+                       jitter=jitter)
+    if seed not in refs:  # one monolithic reference per event set
+        refs[seed] = eng.run_stream(store.values, src.in_order_events, 8,
+                                    fused=True)
+    outs_ref, vals_ref = refs[seed]
+    rec = StreamService(eng, ServiceConfig(
+        punct_interval=8, chunk_intervals=chunk,
+        watermark=WatermarkPolicy(allowed_lateness=jitter))).run(src)
+    np.testing.assert_array_equal(rec.final_values, np.asarray(vals_ref))
+    assert len(rec.outputs) == len(outs_ref)
+    for a, b in zip(rec.outputs, outs_ref):
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]),
+                                          np.asarray(b[k]))

@@ -1,0 +1,216 @@
+"""Continuous streaming service (DESIGN.md §2.6).
+
+Contracts pinned here:
+
+1. **Chunked == monolithic**: the service's K-interval chunked execution
+   (donated state carry across chunk calls, including the recompiled tail
+   chunk) is *bit-identical* to one monolithic ``run_stream`` over the
+   same events — for every app, for tstream and mvlk, and with
+   out-of-order arrivals whose jitter stays inside the watermark window.
+2. **Watermark accounting**: late rows are rerouted or dropped and
+   counted either way; the conservation law holds (every arrived event is
+   processed exactly once, counted dropped, or still pending); emitted
+   watermarks are monotone.
+3. **Admission control**: the bounded ready queue drops whole arrival
+   batches with accounting under ``admission="drop"``; ``"block"``
+   backpressures the source and never drops.
+4. **Merged stats**: one structured record covering watermark, admission
+   and exchange drops; each category logged at most once per run.
+"""
+import logging
+
+import numpy as np
+import pytest
+
+from repro.apps import ALL_APPS
+from repro.core.intervals import ReplaySource, WatermarkPolicy
+from repro.core.scheduler import DualModeEngine, EngineConfig
+from repro.runtime.service import (ServiceConfig, StreamService,
+                                   ts_base_for)
+
+
+def conservation_ok(stats):
+    d = stats["drops"]
+    return stats["arrived"] == (stats["processed"] + stats["replayed"]
+                                + d["watermark"] + d["admission"]
+                                + stats["unprocessed"])
+
+
+def assert_outputs_identical(svc_outputs, ref_outputs):
+    assert len(svc_outputs) == len(ref_outputs) > 0
+    for i, (a, b) in enumerate(zip(svc_outputs, ref_outputs)):
+        assert set(a) == set(b)
+        for k in a:
+            np.testing.assert_array_equal(
+                np.asarray(a[k]), np.asarray(b[k]),
+                err_msg=f"output {k} interval {i}")
+
+
+def run_service_and_reference(app, scheme, *, n_events=80, interval=16,
+                              chunk=2, jitter=5, seed=11, cfg_kw=None):
+    """Service over a jittered arrival stream vs monolithic run_stream on
+    the in-order events.  80 events / interval 16 / K=2 covers the tail
+    chunk (chunks of 2, 2, 1 intervals)."""
+    src = ReplaySource(app.gen_events, n_events, seed=seed,
+                       arrival_batch=13, jitter=jitter)
+    store = app.make_store()
+    eng = DualModeEngine(app, store, EngineConfig(scheme=scheme))
+    outs_ref, vals_ref = eng.run_stream(store.values, src.in_order_events,
+                                        interval, fused=True)
+    cfg = ServiceConfig(punct_interval=interval, chunk_intervals=chunk,
+                        watermark=WatermarkPolicy(allowed_lateness=jitter),
+                        **(cfg_kw or {}))
+    rec = StreamService(eng, cfg).run(src)
+    return rec, outs_ref, vals_ref
+
+
+@pytest.mark.parametrize("scheme,app_name", [
+    ("tstream", "gs"),    # segscan fast path
+    ("tstream", "tp"),    # heterogeneous max tables
+    ("tstream", "sl"),    # gated lockstep path
+    ("tstream", "ob"),    # non-associative lockstep path
+    ("mvlk", "gs"),
+])
+def test_chunked_service_matches_monolithic_bitwise(scheme, app_name):
+    app = ALL_APPS[app_name]
+    rec, outs_ref, vals_ref = run_service_and_reference(app, scheme)
+    np.testing.assert_array_equal(rec.final_values, np.asarray(vals_ref))
+    assert_outputs_identical(rec.outputs, outs_ref)
+    assert conservation_ok(rec.stats)
+    assert rec.stats["drops"] == dict(watermark=0, admission=0, exchange=0)
+
+
+def test_chunk_size_and_arrival_pattern_invariance():
+    """Different K and arrival batchings reach the same bits."""
+    app = ALL_APPS["gs"]
+    store = app.make_store()
+    eng = DualModeEngine(app, store, EngineConfig())
+    mk = lambda b, j: ReplaySource(app.gen_events, 96, seed=4,
+                                   arrival_batch=b, jitter=j)
+    ref, vals_ref = eng.run_stream(store.values, mk(7, 0).in_order_events,
+                                   16, fused=True)
+    for chunk, batch, jitter in ((1, 7, 0), (3, 29, 4), (6, 96, 9)):
+        rec = StreamService(eng, ServiceConfig(
+            punct_interval=16, chunk_intervals=chunk,
+            watermark=WatermarkPolicy(allowed_lateness=jitter))).run(
+                mk(batch, jitter))
+        np.testing.assert_array_equal(rec.final_values, np.asarray(vals_ref))
+        assert_outputs_identical(rec.outputs, ref)
+
+
+def test_watermark_drop_accounting_and_monotonicity():
+    """Jitter far beyond the lateness window: drops are counted, the run
+    completes degraded (never crashes), conservation holds, and recorded
+    per-interval watermarks are monotone."""
+    app = ALL_APPS["gs"]
+    eng = DualModeEngine(app, app.make_store(), EngineConfig())
+    rec = StreamService(eng, ServiceConfig(
+        punct_interval=16, chunk_intervals=2,
+        watermark=WatermarkPolicy(allowed_lateness=2, late="drop"))).run(
+            ReplaySource(app.gen_events, 256, seed=2, arrival_batch=16,
+                         jitter=24))
+    assert rec.stats["drops"]["watermark"] > 0
+    assert conservation_ok(rec.stats)
+    wms = [c["watermark"] for c in rec.commits]
+    assert wms == sorted(wms)
+    assert len(rec.outputs) * 16 == rec.stats["processed"]
+
+
+def test_watermark_reroute_accounting():
+    """Same jittered stream under reroute: nothing drops, late rows are
+    counted and land in later intervals, conservation holds."""
+    app = ALL_APPS["gs"]
+    eng = DualModeEngine(app, app.make_store(), EngineConfig())
+    rec = StreamService(eng, ServiceConfig(
+        punct_interval=16, chunk_intervals=2,
+        watermark=WatermarkPolicy(allowed_lateness=2, late="reroute"))).run(
+            ReplaySource(app.gen_events, 256, seed=2, arrival_batch=16,
+                         jitter=24))
+    assert rec.stats["late_rerouted"] > 0
+    assert rec.stats["drops"]["watermark"] == 0
+    assert conservation_ok(rec.stats)
+    assert sum(c["n_late"] for c in rec.commits) > 0
+
+
+def test_admission_drop_bounded_queue():
+    """A firehose source against a tiny queue: whole arrival batches are
+    rejected with accounting; the run still completes."""
+    app = ALL_APPS["gs"]
+    eng = DualModeEngine(app, app.make_store(), EngineConfig())
+    rec = StreamService(eng, ServiceConfig(
+        punct_interval=16, chunk_intervals=1, queue_intervals=2,
+        admission="drop")).run(
+            ReplaySource(app.gen_events, 512, seed=1, arrival_batch=64))
+    assert rec.stats["drops"]["admission"] > 0
+    assert conservation_ok(rec.stats)
+
+
+def test_admission_block_never_drops():
+    app = ALL_APPS["gs"]
+    eng = DualModeEngine(app, app.make_store(), EngineConfig())
+    rec = StreamService(eng, ServiceConfig(
+        punct_interval=16, chunk_intervals=1, queue_intervals=1,
+        admission="block")).run(
+            ReplaySource(app.gen_events, 256, seed=1, arrival_batch=64))
+    assert rec.stats["drops"] == dict(watermark=0, admission=0, exchange=0)
+    assert rec.stats["processed"] == 256
+    assert conservation_ok(rec.stats)
+
+
+def test_max_intervals_and_latency_record():
+    app = ALL_APPS["gs"]
+    eng = DualModeEngine(app, app.make_store(), EngineConfig())
+    rec = StreamService(eng, ServiceConfig(
+        punct_interval=16, chunk_intervals=2)).run(
+            ReplaySource(app.gen_events, 160, seed=6, arrival_batch=32),
+            max_intervals=4)
+    assert len(rec.outputs) == 4
+    lat = rec.latency_s()
+    assert lat.shape == (4 * 16,)
+    assert np.all(lat >= 0)
+    pct = rec.latency_percentiles((50, 99))
+    assert pct["p50"] <= pct["p99"]
+    assert rec.sustained_events_per_s() > 0
+    assert conservation_ok(rec.stats)
+    assert rec.stats["unprocessed"] > 0  # leftovers are accounted, not lost
+
+
+def test_ts_base_int32_safe_forever():
+    """An unbounded run's timestamp base never overflows int32: it equals
+    g*interval below the wrap and stays inside int32 arbitrarily far in,
+    with monotone per-chunk bases across every wrap boundary."""
+    for interval in (16, 512, 4096):
+        wrap = 2 ** 30 // interval
+        for g in (0, 1, 1000, wrap - 1):
+            assert ts_base_for(g, interval) == g * interval
+        for g in (wrap, 3 * wrap + 17, 2 ** 40):
+            base = ts_base_for(g, interval)
+            assert 0 <= base < 2 ** 30
+            assert base + interval <= 2 ** 31 - 1
+            # within one chunk the bases stay monotone after any wrap
+            assert ts_base_for(g, interval) % interval == 0
+
+
+def test_each_drop_category_logged_once_per_run(caplog):
+    """Drops spread over many intervals produce ONE log line per category
+    per run — not one per interval."""
+    app = ALL_APPS["gs"]
+    eng = DualModeEngine(app, app.make_store(), EngineConfig())
+    with caplog.at_level(logging.INFO, logger="repro.runtime.service"):
+        # run A: watermark drops in most intervals (heavy jitter, no
+        # admission pressure)
+        rec_a = StreamService(eng, ServiceConfig(
+            punct_interval=16, chunk_intervals=2,
+            watermark=WatermarkPolicy(allowed_lateness=1, late="drop"))).run(
+                ReplaySource(app.gen_events, 256, seed=9, arrival_batch=16,
+                             jitter=32))
+        # run B: admission drops across many cycles (firehose, tiny queue)
+        rec_b = StreamService(eng, ServiceConfig(
+            punct_interval=16, chunk_intervals=1, queue_intervals=2,
+            admission="drop")).run(
+                ReplaySource(app.gen_events, 512, seed=9, arrival_batch=64))
+    assert rec_a.stats["drops"]["watermark"] > 0
+    assert rec_b.stats["drops"]["admission"] > 0
+    for needle in ("watermark policy dropped", "admission control dropped"):
+        hits = [r for r in caplog.records if needle in r.getMessage()]
+        assert len(hits) == 1, f"{needle!r} logged {len(hits)} times"

@@ -1,0 +1,109 @@
+"""Crash-injection recovery for the stream engine (DESIGN.md §2.6).
+
+Mirrors ``runtime/ft.py``'s determinism contract for the streaming
+service: punctuation-aligned snapshots through ``ckpt/`` + a replayable
+source (pure function of its seed) make crash → restore → replay
+**bitwise identical** to the uninterrupted run — final store, every
+post-resume per-interval output, and the crashed run's committed prefix
+all match the reference exactly.  The sharded (8 forced host devices)
+case lives in tests/test_service_sharded.py.
+"""
+import numpy as np
+import pytest
+
+from repro.apps import ALL_APPS
+from repro.core.intervals import ReplaySource, WatermarkPolicy
+from repro.core.scheduler import DualModeEngine, EngineConfig
+from repro.runtime.service import ServiceConfig, StreamService
+
+from test_service import assert_outputs_identical, conservation_ok
+
+INTERVAL = 16
+
+
+def crash_restore_replay(app_name, scheme, tmp_path, *, abort_repass=False,
+                         crash_after=7, snapshot_every=4, jitter=3):
+    app = ALL_APPS[app_name]
+    store = app.make_store()
+    eng = DualModeEngine(app, store,
+                         EngineConfig(scheme=scheme,
+                                      abort_repass=abort_repass))
+    mk = lambda: ReplaySource(app.gen_events, 160, seed=7,
+                              arrival_batch=11, jitter=jitter)
+    cfg = ServiceConfig(
+        punct_interval=INTERVAL, chunk_intervals=2,
+        snapshot_every=snapshot_every, ckpt_dir=str(tmp_path),
+        watermark=WatermarkPolicy(allowed_lateness=jitter))
+    # uninterrupted reference (no snapshots: prove they don't perturb)
+    ref = StreamService(eng, ServiceConfig(
+        punct_interval=INTERVAL, chunk_intervals=2,
+        watermark=WatermarkPolicy(allowed_lateness=jitter))).run(mk())
+
+    svc = StreamService(eng, cfg)
+    with pytest.raises(RuntimeError, match="injected failure"):
+        svc.run(mk(), crash_after_interval=crash_after)
+    crashed = svc.last_run
+    assert crashed.stats["crashed"]
+    # even a crashed record conserves: dispatched-but-uncommitted chunks
+    # count as unprocessed, they don't vanish from the accounting
+    assert conservation_ok(crashed.stats)
+    assert crashed.snapshots, "crash landed before the first snapshot"
+    assert len(crashed.outputs) > crashed.snapshots[-1], \
+        "crash must land after the snapshot to exercise replay"
+
+    rec = StreamService(eng, cfg).resume(mk())
+    snap = rec.stats["replayed"] // INTERVAL
+    assert snap == crashed.snapshots[-1]
+
+    # the recovered continuation reproduces the uninterrupted run bitwise
+    np.testing.assert_array_equal(rec.final_values, ref.final_values)
+    assert_outputs_identical(rec.outputs, ref.outputs[snap:])
+    # the crashed run's committed prefix already matched it too
+    assert_outputs_identical(crashed.outputs,
+                             ref.outputs[: len(crashed.outputs)])
+    assert conservation_ok(rec.stats)
+    return rec
+
+
+def test_crash_restore_replay_assoc_path(tmp_path):
+    crash_restore_replay("gs", "tstream", tmp_path)
+
+
+def test_crash_restore_replay_lockstep_abort_repass(tmp_path):
+    """The gated lockstep path with the abort repass — state history
+    depends on failed-transaction masking, so replay must reproduce the
+    exact abort pattern too."""
+    crash_restore_replay("sl", "tstream", tmp_path, abort_repass=True)
+
+
+def test_recovery_spanning_multiple_snapshots(tmp_path):
+    """Resume picks the LATEST punctuation-aligned snapshot."""
+    rec = crash_restore_replay("gs", "tstream", tmp_path, crash_after=9,
+                               snapshot_every=2)
+    assert rec.stats["replayed"] // INTERVAL == 8
+
+
+def test_resume_without_snapshot_raises(tmp_path):
+    app = ALL_APPS["gs"]
+    eng = DualModeEngine(app, app.make_store(), EngineConfig())
+    svc = StreamService(eng, ServiceConfig(
+        punct_interval=INTERVAL, chunk_intervals=2, snapshot_every=2,
+        ckpt_dir=str(tmp_path / "empty")))
+    with pytest.raises(FileNotFoundError):
+        svc.resume(ReplaySource(app.gen_events, 64, seed=0))
+
+
+def test_recovery_rejects_dropping_admission(tmp_path):
+    """Admission drops depend on queue occupancy, which replay does not
+    reproduce — snapshot/recovery must demand the backpressure mode."""
+    with pytest.raises(AssertionError, match="admission"):
+        ServiceConfig(punct_interval=INTERVAL, chunk_intervals=2,
+                      snapshot_every=2, ckpt_dir=str(tmp_path),
+                      admission="drop")
+    app = ALL_APPS["gs"]
+    eng = DualModeEngine(app, app.make_store(), EngineConfig())
+    svc = StreamService(eng, ServiceConfig(
+        punct_interval=INTERVAL, chunk_intervals=2, admission="drop"))
+    with pytest.raises(ValueError, match="skip_intervals"):
+        svc.run(ReplaySource(app.gen_events, 64, seed=0),
+                skip_intervals=2)

@@ -1,0 +1,29 @@
+"""Sharded streaming-service contracts (subprocess forces 8 host devices).
+
+The worker (tests/service_worker.py) runs the chunked service over the
+sharded fused driver and reports JSON verdicts: chunked == monolithic ==
+single-device bitwise, crash -> restore -> replay bit-identity, and
+exchange-stat aggregation into the merged accounting record.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.fixture(scope="module")
+def worker_verdicts():
+    worker = os.path.join(os.path.dirname(__file__), "service_worker.py")
+    proc = subprocess.run([sys.executable, worker], capture_output=True,
+                          text=True, timeout=1800)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.parametrize("case", ["gs/chunked", "sl/chunked",
+                                  "gs/crash_resume"])
+def test_sharded_service(worker_verdicts, case):
+    v = worker_verdicts[case]
+    assert v["ok"], f"{case}: {v.get('why')}"
