@@ -6,8 +6,15 @@ execution over the fused driver, punctuation-aligned snapshots, and —
 with ``--inject-restart`` — a crash/restore/replay drill that asserts the
 recovered run is bitwise identical to the uninterrupted one.
 
+With ``--corrupt-latest`` on top, the newest snapshot is damaged on disk
+after the crash (torn-write simulation): ``resume`` must fall back to the
+previous *valid* snapshot — never leak an exception — and still
+reproduce the uninterrupted run bitwise (DESIGN.md §2.7).
+
     PYTHONPATH=src python examples/streaming_service.py
     PYTHONPATH=src python examples/streaming_service.py --inject-restart
+    PYTHONPATH=src python examples/streaming_service.py --inject-restart \
+        --corrupt-latest        # recovery past a corrupted latest snapshot
     PYTHONPATH=src python examples/streaming_service.py --devices 8 \
         --inject-restart        # sharded service on 8 forced host devices
 """
@@ -26,6 +33,10 @@ ap.add_argument("--jitter", type=int, default=8,
 ap.add_argument("--inject-restart", action="store_true",
                 help="crash mid-run, restore the snapshot, assert bitwise "
                      "recovery")
+ap.add_argument("--corrupt-latest", action="store_true",
+                help="with --inject-restart: corrupt the newest snapshot "
+                     "before resuming — recovery must fall back to the "
+                     "previous valid one")
 ap.add_argument("--devices", type=int, default=0,
                 help="force N host devices and run the sharded driver")
 args = ap.parse_args()
@@ -39,6 +50,7 @@ import numpy as np              # noqa: E402
 from repro.apps import ALL_APPS                                # noqa: E402
 from repro.core.intervals import ReplaySource, WatermarkPolicy  # noqa: E402
 from repro.core.scheduler import DualModeEngine, EngineConfig   # noqa: E402
+from repro.runtime.faults import corrupt_snapshot               # noqa: E402
 from repro.runtime.service import ServiceConfig, StreamService  # noqa: E402
 
 
@@ -90,8 +102,21 @@ def main():
             sys.exit("injected crash did not fire")
         except RuntimeError as e:
             print(f"  {e} (snapshots at {svc.last_run.snapshots})")
+        newest = svc.last_run.snapshots[-1]
+        if args.corrupt_latest:
+            assert len(svc.last_run.snapshots) >= 2, \
+                "corrupt-latest drill needs a fallback snapshot"
+            what = corrupt_snapshot(
+                os.path.join(ckpt_dir, f"step_{newest:08d}"),
+                "truncate_leaf")
+            print(f"  corrupted snapshot @{newest}: {what}")
         rec = StreamService(eng, cfg).resume(mk())
         snap = rec.stats["replayed"] // args.interval
+        if args.corrupt_latest:
+            assert snap < newest, \
+                "resume used the corrupted snapshot instead of falling back"
+            print(f"  resume fell back past corrupted @{newest} "
+                  f"to valid @{snap} ✓")
         print(f"  restored snapshot @{snap}, replayed "
               f"{rec.stats['replayed']} events, re-executed "
               f"{len(rec.outputs)} intervals")

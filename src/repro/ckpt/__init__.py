@@ -1,2 +1,3 @@
-from .checkpoint import (latest_step, load_checkpoint, save_checkpoint,
-                         reshard)
+from .checkpoint import (checkpoint_steps, latest_step, latest_valid_step,
+                         load_checkpoint, prune_checkpoints, reshard,
+                         save_checkpoint, verify_checkpoint)

@@ -7,6 +7,17 @@ including a *different mesh* (``reshard``): values are loaded host-side and
 re-placed under the target sharding.  This is the elastic-scaling path:
 save on (16,16), resume on (2,16,16) or a shrunken mesh.
 
+Durability + validity (DESIGN.md §2.7): every leaf file and the manifest
+are fsync'd before the atomic rename and the manifest records each
+leaf's byte size and CRC32, so
+
+* a crashed writer leaves only a ``.tmp`` directory (or a manifest-less
+  ``step_*`` debris dir) — both invisible to :func:`latest_step`;
+* a torn or bit-rotted *published* snapshot is detected by
+  :func:`verify_checkpoint` and skipped by :func:`latest_valid_step`,
+  which is what lets a service resume fall back to the newest snapshot
+  that actually verifies instead of dying on a corrupt latest.
+
 For real multi-host deployment each host would write only the shards it
 owns (addressable_shards) — the manifest format already carries the
 global shape, so the single-host writer here is the degenerate case.
@@ -16,13 +27,17 @@ from __future__ import annotations
 import json
 import os
 import re
-from typing import Any, Optional
+import shutil
+import zlib
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 PyTree = Any
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
 
 
 def _path_str(path) -> str:
@@ -35,6 +50,29 @@ def _path_str(path) -> str:
         else:
             parts.append(str(k))
     return "/".join(parts)
+
+
+def _crc32_file(path: str) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            block = f.read(1 << 20)
+            if not block:
+                return crc
+            crc = zlib.crc32(block, crc)
+
+
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:                      # platform without dir fds
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree,
@@ -51,33 +89,129 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree,
         if dtype == "bfloat16":  # numpy can't serialize ml_dtypes natively
             arr = arr.view(np.uint16)
         fname = re.sub(r"[^\w\-]", "_", key) + ".npy"
-        np.save(os.path.join(tmp, fname), arr)
-        manifest["leaves"][key] = dict(file=fname, dtype=dtype,
-                                       shape=list(arr.shape))
+        fpath = os.path.join(tmp, fname)
+        with open(fpath, "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
+        manifest["leaves"][key] = dict(
+            file=fname, dtype=dtype, shape=list(arr.shape),
+            bytes=os.path.getsize(fpath), crc32=_crc32_file(fpath))
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
-    # atomic publish: a crashed writer never yields a half checkpoint
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)
+    # atomic publish: a crashed writer never yields a half checkpoint —
+    # every byte is durable before the rename makes the step visible
     if os.path.exists(out):
-        import shutil
         shutil.rmtree(out)
     os.rename(tmp, out)
+    _fsync_dir(ckpt_dir)
     return out
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
-    if not os.path.isdir(ckpt_dir):
+def _read_manifest(ckpt_dir: str, step: int) -> Optional[dict]:
+    """The step's manifest, or None if missing/unparseable (torn write)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_") and not d.endswith(".tmp")]
-    return max(steps) if steps else None
+
+
+def checkpoint_steps(ckpt_dir: str) -> List[int]:
+    """Published steps with a *readable* manifest, descending.
+
+    A ``step_*`` directory without a parseable ``manifest.json`` is a
+    crashed writer's debris and never shadows a good snapshot.
+    """
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(d)
+        if m and _read_manifest(ckpt_dir, int(m.group(1))) is not None:
+            steps.append(int(m.group(1)))
+    return sorted(steps, reverse=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = checkpoint_steps(ckpt_dir)
+    return steps[0] if steps else None
+
+
+def verify_checkpoint(ckpt_dir: str, step: int) -> Tuple[bool, str]:
+    """Cheap integrity check: manifest readable, every leaf present with
+    the recorded byte size and CRC32.  Returns ``(ok, why)``; manifests
+    written before checksums existed verify on presence alone."""
+    manifest = _read_manifest(ckpt_dir, step)
+    if manifest is None:
+        return False, "manifest missing or unreadable"
+    src = os.path.join(ckpt_dir, f"step_{step:08d}")
+    for key, ent in manifest.get("leaves", {}).items():
+        path = os.path.join(src, ent["file"])
+        if not os.path.isfile(path):
+            return False, f"leaf {key!r} missing"
+        if "bytes" in ent and os.path.getsize(path) != ent["bytes"]:
+            return False, (f"leaf {key!r} truncated: "
+                           f"{os.path.getsize(path)} != {ent['bytes']}B")
+        if "crc32" in ent and _crc32_file(path) != ent["crc32"]:
+            return False, f"leaf {key!r} checksum mismatch"
+    return True, "ok"
+
+
+def latest_valid_step(ckpt_dir: str) -> Optional[int]:
+    """Newest step that passes :func:`verify_checkpoint` — the recovery
+    fallback order: a torn/corrupted latest never masks an older good
+    snapshot."""
+    for step in checkpoint_steps(ckpt_dir):
+        if verify_checkpoint(ckpt_dir, step)[0]:
+            return step
+    return None
+
+
+def prune_checkpoints(ckpt_dir: str, keep_last: int) -> List[int]:
+    """Retention after atomic publish: keep the newest ``keep_last``
+    ``step_*`` directories (by step number, readable or not — corrupt
+    dirs age out too) and sweep stale ``.tmp`` writer debris.  Returns
+    the removed steps."""
+    if keep_last <= 0 or not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(d)
+        if m:
+            steps.append(int(m.group(1)))
+    steps.sort()
+    removed = []
+    for s in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+        removed.append(s)
+    newest = steps[-1] if steps else None
+    for d in os.listdir(ckpt_dir):
+        m = re.match(r"^step_(\d+)\.tmp$", d)
+        if m and newest is not None and int(m.group(1)) < newest:
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+    return removed
 
 
 def load_checkpoint(ckpt_dir: str, step: int, target: PyTree,
-                    shardings: Optional[PyTree] = None) -> PyTree:
+                    shardings: Optional[PyTree] = None,
+                    verify: bool = False) -> PyTree:
     """Restore into the structure of ``target`` (a pytree of arrays or
     ShapeDtypeStructs).  With ``shardings``, device_put each leaf to its
-    (possibly different-mesh) sharding — the reshard path."""
+    (possibly different-mesh) sharding — the reshard path.  With
+    ``verify``, integrity-check the snapshot first and raise
+    ``ValueError`` instead of loading damaged bytes."""
     src = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if verify:
+        ok, why = verify_checkpoint(ckpt_dir, step)
+        if not ok:
+            raise ValueError(f"checkpoint step {step} fails verification: "
+                             f"{why}")
     with open(os.path.join(src, "manifest.json")) as f:
         manifest = json.load(f)
 

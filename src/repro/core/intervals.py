@@ -174,6 +174,20 @@ class IntervalAssembler:
         return self.arrived == (self.assembled + self.watermark_dropped
                                 + self.pending)
 
+    @property
+    def ledger(self) -> Dict[str, int]:
+        """The full accounting record — the conservation law's terms plus
+        the reroute count.  Merged into ``StreamService.stats`` so the
+        balance stays checkable across every injected fault (crashed runs
+        included): a fault may strand or drop rows, never lose them from
+        the ledger."""
+        return dict(arrived=self.arrived, assembled=self.assembled,
+                    dropped=self.watermark_dropped, pending=self.pending,
+                    rerouted=self.late_rerouted, emitted=self.emitted)
+
+    def assert_conserved(self) -> None:
+        assert self.conservation_ok(), self.ledger
+
 
 class ReplaySource:
     """Deterministic replayable arrival process.

@@ -175,6 +175,19 @@ class ShardedStream:
         return ([jax.tree_util.tree_map(lambda x, i=i: x[i], outs)
                  for i in range(n_intervals)], values)
 
+    def set_exchange_slack(self, slack: float) -> None:
+        """Graceful degradation under repeated exchange overflow: widen
+        the per-bucket capacity at a punctuation boundary.
+
+        The capacity is a *python* value baked into the jitted program's
+        trace, so changing the slack must rebind the jit wrapper — the
+        next dispatch recompiles with the new capacity (the caller logs
+        the escalation; results for shipped ops are unaffected, only the
+        padding widens)."""
+        self.exchange_slack = float(slack)
+        self._impl = jax.jit(partial(_sharded_fused_impl, eng=self),
+                             donate_argnums=0)
+
     def run_chunk(self, values, batched, ts0: int):
         """Chunked service entry (see ``DualModeEngine.run_stream_chunk``).
 

@@ -1,3 +1,7 @@
+from .faults import (Fault, FaultPlane, HangAborted, InjectedCrashError,
+                     InjectedFault, TransientSourceError, corrupt_snapshot,
+                     random_schedule, schedule_from_json, schedule_to_json)
 from .ft import TrainLoop, TrainLoopConfig
-from .service import ServiceConfig, ServiceRun, StreamService
+from .service import (ExecutorHungError, ServiceConfig, ServiceRun,
+                      StreamService)
 from .straggler import StragglerPolicy, ShardDispatcher

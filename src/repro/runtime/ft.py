@@ -13,14 +13,13 @@ restarts reshard (ckpt.reshard) instead of requiring the old topology.
 from __future__ import annotations
 
 import dataclasses
-import os
-import time
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import numpy as np
 
-from repro.ckpt import latest_step, load_checkpoint, save_checkpoint
+from repro.ckpt import (latest_step, load_checkpoint, prune_checkpoints,
+                        save_checkpoint)
 
 PyTree = Any
 
@@ -82,9 +81,4 @@ class TrainLoop:
         return self.params
 
     def _gc(self):
-        steps = sorted(int(d.split("_")[1])
-                       for d in os.listdir(self.cfg.ckpt_dir)
-                       if d.startswith("step_") and not d.endswith(".tmp"))
-        for s in steps[: -self.cfg.keep_last]:
-            import shutil
-            shutil.rmtree(os.path.join(self.cfg.ckpt_dir, f"step_{s:08d}"))
+        prune_checkpoints(self.cfg.ckpt_dir, self.cfg.keep_last)

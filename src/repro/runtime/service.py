@@ -1,4 +1,4 @@
-"""Continuous streaming service runtime (DESIGN.md §2.6).
+"""Continuous streaming service runtime (DESIGN.md §2.6, failure model §2.7).
 
 ``StreamService`` turns the batch-replay drivers into a steady-state
 pipeline over an unbounded arrival source:
@@ -28,13 +28,39 @@ pipeline over an unbounded arrival source:
 * **Punctuation-aligned recovery**: every ``snapshot_every`` intervals
   the service drains the pipeline and writes the state buffer through
   ``ckpt/`` (the checkpoint step number IS the punctuation index).
-  Recovery restores the snapshot and replays the deterministic source,
-  discarding the first ``intervals_done`` re-assembled intervals — the
-  resumed run is bitwise identical to an uninterrupted one.
+  Recovery restores the newest snapshot that *verifies* — a torn or
+  corrupted latest falls back to the previous valid one — and replays
+  the deterministic source, discarding the first ``intervals_done``
+  re-assembled intervals: the resumed run is bitwise identical to an
+  uninterrupted one.
+
+Hardened failure path (DESIGN.md §2.7):
+
+* **Source retry/backoff**: transient pull failures
+  (``faults.TransientSourceError`` / ``TimeoutError``) retry up to
+  ``source_retries`` times with exponential backoff; pulls slower than
+  the ``StragglerPolicy`` deadline count as deadline misses, and the
+  combined backfill ratio trips the policy's alarm (logged once,
+  recorded in ``stats["source"]``).
+* **Executor watchdog**: with ``watchdog_factor`` set, a monitor thread
+  declares the executor hung when no progress lands within
+  ``watchdog_factor ×`` the median recent chunk latency (never below
+  ``watchdog_min_s``; ``watchdog_grace_s`` covers the first, possibly
+  compiling, chunk).  On fire it aborts the executor, drains every
+  committable in-flight chunk, writes an *emergency* punctuation-aligned
+  snapshot when the carry is safe, and surfaces a structured
+  ``ExecutorHungError`` with the merged stats intact.
+* **Exchange-overflow degradation**: with ``escalate_overflow`` set, a
+  sharded chunk that dropped ops schedules an automatic (logged)
+  ``exchange_slack`` escalation applied at the next punctuation boundary
+  instead of dropping silently forever.
+* **Fault injection**: ``run(..., faults=FaultPlane(...))`` consults the
+  deterministic fault plane (``runtime/faults.py``) at each named site.
 
 ``StreamService.stats`` is the one merged accounting record: watermark
-drops, admission drops and sharded exchange overflow land in a single
-structured dict and each category is logged at most once per run.
+drops, admission drops, sharded exchange overflow, the assembler ledger,
+source retry/backfill counters, fired faults and any structured error
+land in a single dict; each category is logged at most once per run.
 """
 from __future__ import annotations
 
@@ -52,10 +78,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.ckpt import latest_step, load_checkpoint, save_checkpoint
+from repro.ckpt import (checkpoint_steps, load_checkpoint, prune_checkpoints,
+                        save_checkpoint, verify_checkpoint)
 from repro.core.intervals import IntervalAssembler, WatermarkPolicy
 
+from .faults import FaultPlane, TransientSourceError
+from .straggler import StragglerPolicy
+
 log = logging.getLogger(__name__)
+
+
+class ExecutorHungError(RuntimeError):
+    """Watchdog verdict: the executor made no progress within its budget.
+
+    ``info`` is the structured record (idle/timeout seconds, committed
+    intervals, in-flight chunks, emergency snapshot step if one was
+    written) — also merged into ``stats["error"]``.
+    """
+
+    def __init__(self, msg: str, info: Optional[Dict] = None):
+        super().__init__(msg)
+        self.info = dict(info or {})
+
+
+class _Aborted(Exception):
+    """Internal: the run was already declared failed; stop silently."""
 
 
 def ts_base_for(global_interval: int, interval: int) -> int:
@@ -82,6 +129,16 @@ class ServiceConfig:
     watermark: WatermarkPolicy = WatermarkPolicy()
     snapshot_every: int = 0         # intervals between snapshots; 0 = off
     ckpt_dir: Optional[str] = None
+    keep_last: int = 0              # snapshot retention; 0 = keep all
+    # -- hardened failure path (DESIGN.md §2.7) ------------------------
+    straggler: StragglerPolicy = StragglerPolicy()
+    source_retries: int = 2         # bounded retry on transient pull errors
+    retry_backoff_s: float = 0.05   # exponential backoff base
+    watchdog_factor: float = 0.0    # × median recent chunk latency; 0 = off
+    watchdog_min_s: float = 5.0     # timeout floor once latencies exist
+    watchdog_grace_s: float = 120.0  # before the first commit (covers jit)
+    escalate_overflow: int = 0      # max automatic slack escalations; 0 = off
+    escalate_factor: float = 2.0
 
     def __post_init__(self):
         assert self.punct_interval > 0
@@ -89,6 +146,20 @@ class ServiceConfig:
         assert self.admission in ("block", "drop"), self.admission
         assert self.queue_intervals >= self.chunk_intervals, \
             "queue_intervals must cover at least one chunk"
+        assert self.keep_last >= 0
+        assert self.source_retries >= 0 and self.retry_backoff_s >= 0
+        assert self.watchdog_factor >= 0
+        if self.watchdog_factor:
+            assert self.watchdog_min_s > 0 and self.watchdog_grace_s > 0
+        assert self.escalate_overflow >= 0
+        if self.escalate_overflow:
+            assert self.escalate_factor > 1.0
+            # a mid-run capacity change alters which ops drop; replay does
+            # not reproduce the escalation history, so degraded service and
+            # exact recovery are mutually exclusive modes
+            assert not self.snapshot_every, \
+                ("automatic slack escalation is not replayable: disable "
+                 "snapshots or escalation")
         if self.snapshot_every:
             assert self.snapshot_every % self.chunk_intervals == 0, \
                 ("snapshots are taken at chunk boundaries: snapshot_every "
@@ -157,7 +228,8 @@ class StreamService:
     # ------------------------------------------------------------------
     def run(self, source, values=None, *, skip_intervals: int = 0,
             max_intervals: Optional[int] = None,
-            crash_after_interval: Optional[int] = None) -> ServiceRun:
+            crash_after_interval: Optional[int] = None,
+            faults: Optional[FaultPlane] = None) -> ServiceRun:
         """Drive the service until the source drains (or ``max_intervals``).
 
         ``skip_intervals`` is the recovery path: the first N re-assembled
@@ -166,7 +238,9 @@ class StreamService:
         index N with the restored state — assembly is deterministic, so
         the continuation is bitwise identical to the uninterrupted run.
         ``crash_after_interval`` injects a failure once the interval with
-        that global index has committed (tests/CI restart drill).
+        that global index has committed (tests/CI restart drill);
+        ``faults`` is the general, scheduled fault plane
+        (``runtime/faults.py``).
         """
         cfg, eng = self.cfg, self.engine
         if skip_intervals and cfg.admission != "block":
@@ -186,6 +260,15 @@ class StreamService:
         state = dict(exhausted=False, to_skip=int(skip_intervals), err=None)
         g_next = int(skip_intervals)    # global index of next interval
         executed = 0                    # intervals submitted this run
+        srcst = dict(pulls=0, retries=0, deadline_misses=0, backoff_s=0.0)
+        esc = dict(pending=False, done=0)
+        vals_ok = dict(safe=True)       # carry readable (not mid-donation)
+        # watchdog progress record: ``busy`` is True only while the
+        # executor is actively processing (dispatch/commit/drain), ``t``
+        # is bumped at every step forward, ``lat`` holds recent
+        # commit-to-commit chunk latencies
+        progress = dict(busy=False, t=time.monotonic(), last_commit=None,
+                        lat=collections.deque(maxlen=8))
         # staged chunks queued for the executor thread; maxsize=1 plus the
         # executor's depth-2 in_flight window bounds the pipeline
         work_q: queue.Queue = queue.Queue(maxsize=1)
@@ -198,14 +281,41 @@ class StreamService:
                 else:
                     ready.append((ev_iv, info))
 
+        def guarded_pull():
+            """One source pull under the straggler policy: transient
+            failures retry with exponential backoff (bounded by
+            ``source_retries``), slow pulls count as deadline misses."""
+            attempt = 0
+            while True:
+                t0 = time.monotonic()
+                try:
+                    if faults is not None:
+                        faults.on_source_pull()
+                    item = next(src)
+                except StopIteration:
+                    raise
+                except (TransientSourceError, TimeoutError):
+                    srcst["retries"] += 1
+                    if attempt >= cfg.source_retries:
+                        raise
+                    delay = cfg.retry_backoff_s * (2.0 ** attempt)
+                    srcst["backoff_s"] += delay
+                    attempt += 1
+                    time.sleep(delay)
+                    continue
+                srcst["pulls"] += 1
+                if time.monotonic() - t0 > cfg.straggler.deadline_s:
+                    srcst["deadline_misses"] += 1
+                return item
+
         def pull_one() -> bool:
             """Admit one arrival batch; False = backpressure (queue full)."""
-            if state["exhausted"]:
+            if state["exhausted"] or state["err"] is not None:
                 return False
             if len(ready) >= cfg.queue_intervals and cfg.admission == "block":
                 return False
             try:
-                ev, t = next(src)
+                ev, t = guarded_pull()
             except StopIteration:
                 state["exhausted"] = True
                 asm.close()
@@ -220,16 +330,24 @@ class StreamService:
             drain_asm()
             return True
 
-        def commit_oldest():
+        def commit_oldest(check_crash: bool = True):
             g0, kk, res, ebs, infos, xst = in_flight.popleft()
             outs = eng.post_outputs(res, ebs, kk)
             t_commit = time.perf_counter()
             rec.t_last_commit = t_commit
+            now = time.monotonic()
+            if progress["last_commit"] is not None:
+                progress["lat"].append(now - progress["last_commit"])
+            progress["last_commit"] = now
+            progress["t"] = now
             if xst is not None:
                 st = jax.device_get(xst)
-                rec.exchange_dropped += int(np.sum(st["dropped"]))
+                dropped_now = int(np.sum(st["dropped"]))
+                rec.exchange_dropped += dropped_now
                 rec.exchange_shipped += int(np.sum(st["shipped"]))
                 rec.exchange_capacity = int(st["capacity"])
+                if dropped_now and esc["done"] < cfg.escalate_overflow:
+                    esc["pending"] = True   # applied at the next dispatch
             for i in range(kk):
                 info = infos[i]
                 rec.outputs.append(outs[i])
@@ -237,17 +355,50 @@ class StreamService:
                 rec.commits.append(dict(
                     interval=g0 + i, commit_s=t_commit,
                     watermark=int(info.watermark), n_late=int(info.n_late)))
-            if crash_after_interval is not None \
+            if check_crash and crash_after_interval is not None \
                     and g0 + kk - 1 >= crash_after_interval:
                 raise RuntimeError(
                     f"injected failure after interval {g0 + kk - 1}")
 
+        def take_snapshot(step: int, emergency: bool = False):
+            host_vals = np.asarray(jax.device_get(vals))
+            path = save_checkpoint(
+                cfg.ckpt_dir, step, dict(values=host_vals),
+                extra_meta=dict(intervals_done=step,
+                                punct_interval=interval,
+                                emergency=emergency))
+            if faults is not None and not emergency:
+                faults.on_snapshot_publish(path)
+            if cfg.keep_last:
+                prune_checkpoints(cfg.ckpt_dir, cfg.keep_last)
+            rec.snapshots.append(step)
+
         def dispatch(batched, kk: int, infos):
             nonlocal vals, g_next
-            res, ebs, vals, xst = eng.run_stream_chunk(
+            if state["err"] is not None:
+                raise _Aborted()
+            if esc["pending"]:
+                # graceful degradation: widen the exchange at a punctuation
+                # boundary instead of dropping silently forever (recompiles
+                # the sharded program; shipped results are unaffected)
+                new_slack = eng._sharded.exchange_slack * cfg.escalate_factor
+                eng._sharded.set_exchange_slack(new_slack)
+                esc["done"] += 1
+                esc["pending"] = False
+                log.warning(
+                    "exchange overflow: escalating slack to %.2f at "
+                    "punctuation boundary %d (escalation %d/%d)",
+                    new_slack, g_next, esc["done"], cfg.escalate_overflow)
+            vals_ok["safe"] = False     # the carry is being donated
+            res, ebs, new_vals, xst = eng.run_stream_chunk(
                 vals, batched, ts_base_for(g_next, interval))
+            vals = new_vals
+            vals_ok["safe"] = True
+            progress["t"] = time.monotonic()
             in_flight.append((g_next, kk, res, ebs, infos, xst))
             g_next += kk
+            if faults is not None:
+                faults.on_executor_chunk()
             # double buffer depth 2: block on the oldest chunk only once a
             # newer one is in flight (its assembly/H2D already overlapped)
             while len(in_flight) > 1:
@@ -257,12 +408,9 @@ class StreamService:
                 # is this boundary's state, then publish through ckpt/
                 while in_flight:
                     commit_oldest()
-                host_vals = np.asarray(jax.device_get(vals))
-                save_checkpoint(
-                    cfg.ckpt_dir, g_next, dict(values=host_vals),
-                    extra_meta=dict(intervals_done=g_next,
-                                    punct_interval=interval))
-                rec.snapshots.append(g_next)
+                if state["err"] is not None:    # abandoned run: never write
+                    raise _Aborted()
+                take_snapshot(g_next)
 
         def executor():
             """Chunk executor thread: dispatch/commit strictly in order so
@@ -270,26 +418,74 @@ class StreamService:
             would.  Running it off the main thread is what makes the feed
             double-buffered on every backend: XLA releases the GIL during
             execution, so the main thread assembles and stages chunk i+1
-            while chunk i computes."""
+            while chunk i computes.  The loop re-checks ``state['err']``
+            between items so a watchdog verdict stops it promptly."""
             try:
-                while True:
-                    item = work_q.get()
+                while state["err"] is None:
+                    try:
+                        item = work_q.get(timeout=0.05)
+                    except queue.Empty:
+                        continue
                     if item is None:
                         break
-                    dispatch(*item)
-                while in_flight:
-                    commit_oldest()
+                    progress["busy"] = True
+                    progress["t"] = time.monotonic()
+                    try:
+                        dispatch(*item)
+                    finally:
+                        progress["busy"] = False
+                if state["err"] is None:
+                    progress["busy"] = True
+                    progress["t"] = time.monotonic()
+                    try:
+                        while in_flight:
+                            commit_oldest()
+                    finally:
+                        progress["busy"] = False
+            except _Aborted:
+                pass
             except BaseException as e:
-                state["err"] = e
+                if state["err"] is None:
+                    state["err"] = e
                 try:                    # unblock the producer
                     while True:
                         work_q.get_nowait()
                 except queue.Empty:
                     pass
 
+        def watchdog():
+            """Fires when the busy executor lands no progress within
+            ``watchdog_factor`` × the median recent chunk latency
+            (``watchdog_grace_s`` before the first commit)."""
+            while not wd_stop.wait(0.02):
+                if not progress["busy"] or state["err"] is not None:
+                    continue
+                if progress["lat"]:
+                    timeout = max(cfg.watchdog_min_s, cfg.watchdog_factor
+                                  * float(np.median(progress["lat"])))
+                else:
+                    timeout = cfg.watchdog_grace_s
+                idle = time.monotonic() - progress["t"]
+                if idle > timeout:
+                    state["err"] = ExecutorHungError(
+                        f"executor made no progress for {idle:.2f}s "
+                        f"(timeout {timeout:.2f}s)",
+                        info=dict(idle_s=idle, timeout_s=timeout,
+                                  committed_intervals=len(rec.outputs),
+                                  in_flight_chunks=len(in_flight)))
+                    if faults is not None:
+                        faults.abort()  # wake any injected stall/hang
+                    return
+
         worker = threading.Thread(target=executor, daemon=True,
                                   name="stream-service-executor")
         worker.start()
+        wd_stop = threading.Event()
+        wd_thread = None
+        if cfg.watchdog_factor:
+            wd_thread = threading.Thread(target=watchdog, daemon=True,
+                                         name="stream-service-watchdog")
+            wd_thread.start()
 
         def submit(kk: int):
             nonlocal executed
@@ -326,39 +522,101 @@ class StreamService:
                 if kk == 0:
                     break
                 submit(kk)
+        except BaseException as e:
+            # a fatal source error (retries exhausted) lands here: fold it
+            # into the structured crash path so stats stay intact
+            if state["err"] is None:
+                state["err"] = e
         finally:
+            if wd_thread is not None:
+                wd_stop.set()
+                wd_thread.join()
             # always shut the executor down — even when the source raised —
             # so no run leaks a thread blocked on the work queue
             if state["err"] is None:
                 work_q.put(None)
-            worker.join()
+                worker.join()
+            else:
+                try:
+                    work_q.put_nowait(None)
+                except queue.Full:
+                    pass
+                # a cooperatively-aborted executor exits promptly; a truly
+                # hung one (blocked inside a device call) is abandoned as a
+                # daemon after the timeout and recorded in the stats
+                worker.join(timeout=2.0 if isinstance(
+                    state["err"], ExecutorHungError) else None)
+
+        err = state["err"]
+        hung_thread = worker.is_alive()
+        if isinstance(err, ExecutorHungError) and not hung_thread:
+            # the watchdog's contract: drain every committable in-flight
+            # chunk (their device arrays are valid results), then publish
+            # an emergency punctuation-aligned snapshot so recovery starts
+            # from this boundary instead of the last periodic one
+            try:
+                while in_flight:
+                    commit_oldest(check_crash=False)
+                if cfg.snapshot_every and vals_ok["safe"] \
+                        and g_next not in rec.snapshots:
+                    take_snapshot(g_next, emergency=True)
+                    err.info["emergency_snapshot"] = g_next
+            except Exception:
+                log.exception("post-hang drain/snapshot failed")
         stranded = max(0, executed - len(rec.outputs))
-        if state["err"] is not None:
-            self._finish(rec, asm, ready, crashed=True, stranded=stranded)
-            raise state["err"]
+        if err is not None:
+            self._finish(rec, asm, ready, crashed=True, stranded=stranded,
+                         source=srcst, error=err, plane=faults,
+                         escalations=esc["done"], hung_thread=hung_thread)
+            raise err
 
         rec.final_values = np.asarray(jax.device_get(vals))
-        self._finish(rec, asm, ready, crashed=False, stranded=stranded)
+        self._finish(rec, asm, ready, crashed=False, stranded=stranded,
+                     source=srcst, plane=faults, escalations=esc["done"])
         return rec
 
     def resume(self, source, **run_kwargs) -> ServiceRun:
-        """Restore the latest punctuation-aligned snapshot and replay."""
+        """Restore the newest *valid* punctuation-aligned snapshot, replay.
+
+        Fallback order (DESIGN.md §2.7): candidate steps descend; a
+        snapshot that fails :func:`repro.ckpt.verify_checkpoint` (torn
+        manifest, truncated or corrupted leaf) or fails to load is logged
+        and skipped, so corruption of the latest snapshot never escapes
+        ``resume`` — it falls back to the previous valid one.  Raises
+        ``FileNotFoundError`` only when no valid snapshot exists at all.
+        """
         cfg = self.cfg
         assert cfg.ckpt_dir, "resume needs a ckpt_dir"
-        last = latest_step(cfg.ckpt_dir)
-        if last is None:
-            raise FileNotFoundError(f"no snapshot under {cfg.ckpt_dir}")
-        restored = load_checkpoint(
-            cfg.ckpt_dir, last,
-            dict(values=self.engine.init_store.values))
-        with open(os.path.join(cfg.ckpt_dir, f"step_{last:08d}",
-                               "manifest.json")) as f:
-            meta = json.load(f)["meta"]
-        assert meta["punct_interval"] == cfg.punct_interval, \
-            "snapshot was taken at a different punctuation interval"
-        return self.run(source, values=restored["values"],
-                        skip_intervals=int(meta["intervals_done"]),
-                        **run_kwargs)
+        rejected = []
+        for step in checkpoint_steps(cfg.ckpt_dir):
+            ok, why = verify_checkpoint(cfg.ckpt_dir, step)
+            if not ok:
+                log.warning("snapshot step %d failed verification (%s); "
+                            "falling back to an older one", step, why)
+                rejected.append(step)
+                continue
+            try:
+                restored = load_checkpoint(
+                    cfg.ckpt_dir, step,
+                    dict(values=self.engine.init_store.values))
+                with open(os.path.join(cfg.ckpt_dir, f"step_{step:08d}",
+                                       "manifest.json")) as f:
+                    meta = json.load(f)["meta"]
+            except Exception as e:
+                log.warning("snapshot step %d failed to load (%s: %s); "
+                            "falling back to an older one",
+                            step, type(e).__name__, e)
+                rejected.append(step)
+                continue
+            # a config mismatch is a caller error, not corruption — raise
+            assert meta["punct_interval"] == cfg.punct_interval, \
+                "snapshot was taken at a different punctuation interval"
+            return self.run(source, values=restored["values"],
+                            skip_intervals=int(meta["intervals_done"]),
+                            **run_kwargs)
+        raise FileNotFoundError(
+            f"no valid snapshot under {cfg.ckpt_dir}"
+            + (f" (rejected steps: {rejected})" if rejected else ""))
 
     # ------------------------------------------------------------------
     @property
@@ -366,9 +624,18 @@ class StreamService:
         return self.last_run.stats if self.last_run else None
 
     def _finish(self, rec: ServiceRun, asm: IntervalAssembler, ready,
-                crashed: bool, stranded: int = 0):
+                crashed: bool, stranded: int = 0,
+                source: Optional[Dict] = None, error=None, plane=None,
+                escalations: int = 0, hung_thread: bool = False):
         interval = self.cfg.punct_interval
         unprocessed = (len(ready) + stranded) * interval + asm.pending
+        srcstats = dict(source or {})
+        backfill = ((srcstats.get("retries", 0)
+                     + srcstats.get("deadline_misses", 0))
+                    / max(srcstats.get("pulls", 0), 1))
+        srcstats["backfill_ratio"] = backfill
+        srcstats["alarm_threshold"] = self.cfg.straggler.max_backfill_ratio
+        srcstats["alarm"] = backfill > self.cfg.straggler.max_backfill_ratio
         rec.stats = dict(
             arrived=asm.arrived + rec.admission_dropped,
             processed=len(rec.outputs) * interval,
@@ -381,12 +648,22 @@ class StreamService:
             snapshots=list(rec.snapshots),
             watermark=int(asm.watermark),
             crashed=crashed,
+            assembly=asm.ledger,
+            source=srcstats,
         )
+        if error is not None:
+            rec.stats["error"] = dict(
+                type=type(error).__name__, msg=str(error),
+                hung_thread=hung_thread, **getattr(error, "info", {}))
+        if plane is not None:
+            rec.stats["faults"] = list(plane.fired)
         if self.engine._sharded is not None:
             rec.stats["exchange"] = dict(
                 dropped=rec.exchange_dropped,
                 shipped=rec.exchange_shipped,
-                capacity=rec.exchange_capacity)
+                capacity=rec.exchange_capacity,
+                escalations=escalations,
+                slack=self.engine._sharded.exchange_slack)
         if not crashed:
             self._log_once(rec.stats)
 
@@ -407,3 +684,11 @@ class StreamService:
         if stats["late_rerouted"]:
             log.info("%d late events rerouted into later intervals this run",
                      stats["late_rerouted"])
+        src = stats.get("source") or {}
+        if src.get("alarm"):
+            log.warning(
+                "source backfill ratio %.2f exceeded the straggler alarm "
+                "threshold %.2f this run (%d retries, %d deadline misses "
+                "over %d pulls)", src["backfill_ratio"],
+                src["alarm_threshold"], src.get("retries", 0),
+                src.get("deadline_misses", 0), src.get("pulls", 0))

@@ -5,8 +5,13 @@ preemption).  The dispatcher tracks per-shard fetch deadlines and applies
 bounded-staleness backfill: a shard that misses its deadline is served the
 deterministic *backup batch* for that (step, shard) — a different sample
 from the same distribution — so the SPMD step never blocks on one host.
-The punctuation-aligned TStream engine uses the same policy for late event
-shards (DESIGN.md §6).
+
+The streaming service applies the same ``StragglerPolicy`` to its source
+pulls (``runtime/service.py``, DESIGN.md §2.7): ``deadline_s`` classifies
+a slow pull as a straggler, transient pull failures retry with bounded
+backoff, and the combined backfill ratio (retries + deadline misses over
+total pulls) trips the ``max_backfill_ratio`` alarm — counted in
+``StreamService.stats["source"]`` and logged once per run.
 
 Pure-python control logic with an injectable clock — unit-testable without
 a fleet.
@@ -18,7 +23,7 @@ import time
 from typing import Callable, Dict, Optional
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class StragglerPolicy:
     deadline_s: float = 1.0        # per-shard fetch budget
     max_backfill_ratio: float = 0.2  # alarm threshold

@@ -1,0 +1,441 @@
+"""Chaos suite: fault-injection plane + hardened recovery (DESIGN.md §2.7).
+
+Contracts pinned here:
+
+1. **Chaos invariant**: for every seeded fault schedule (flaky/stalled
+   source, executor crash or hang between dispatch and commit, snapshot
+   corrupted at publish) the service either completes or crashes with a
+   *balanced* accounting record — and crash → restore → replay is
+   **bitwise identical** to the uninterrupted run.  The assembler ledger
+   ``arrived == assembled + dropped + pending`` balances across every
+   injected fault.
+2. **Snapshot validity**: ``verify_checkpoint`` detects every corruption
+   kind the plane can inject; debris/torn snapshots never shadow a good
+   one (``latest_step``/``latest_valid_step``); ``resume`` falls back
+   past a corrupted latest snapshot instead of leaking an exception.
+3. **Source retry/backoff + straggler alarm**: transient pull failures
+   retry with bounded backoff; exhaustion crashes with stats intact; the
+   backfill-ratio alarm trips and is logged once per run.
+4. **Executor watchdog**: an injected hang is detected, the pipeline
+   drains, an emergency punctuation-aligned snapshot is published, and
+   the structured ``ExecutorHungError`` surfaces — with recovery still
+   bitwise exact.  A plain executor exception surfaces promptly with no
+   leaked threads (service.py error path).
+5. **Retention**: ``keep_last`` prunes after atomic publish; resume still
+   works from the retained tail.
+
+The sharded (8 forced host devices) chaos cases live in
+tests/faults_worker.py, driven by test_faults_sharded below.
+"""
+import json
+import logging
+import os
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.apps import ALL_APPS
+from repro.ckpt import (checkpoint_steps, latest_step, latest_valid_step,
+                        load_checkpoint, save_checkpoint, verify_checkpoint)
+from repro.core.intervals import ReplaySource, WatermarkPolicy
+from repro.core.scheduler import DualModeEngine, EngineConfig
+from repro.runtime.faults import (EXECUTOR_HANG, SITE_KINDS, SNAPSHOT_PUBLISH,
+                                  SOURCE_PULL, Fault, FaultPlane,
+                                  InjectedCrashError, TransientSourceError,
+                                  corrupt_snapshot, random_schedule,
+                                  schedule_from_json, schedule_to_json)
+from repro.runtime.service import (ExecutorHungError, ServiceConfig,
+                                   StreamService)
+from repro.runtime.straggler import StragglerPolicy
+
+from test_service import assert_outputs_identical, conservation_ok
+
+INTERVAL = 16
+N_EVENTS = 160      # 10 intervals -> 5 chunks of K=2 -> snapshots at 4, 8
+JITTER = 3
+WM = WatermarkPolicy(allowed_lateness=JITTER)
+
+
+def mk_source(app):
+    return ReplaySource(app.gen_events, N_EVENTS, seed=7,
+                        arrival_batch=11, jitter=JITTER)
+
+
+def mk_engine(app_name="gs", scheme="tstream"):
+    app = ALL_APPS[app_name]
+    return app, DualModeEngine(app, app.make_store(),
+                               EngineConfig(scheme=scheme))
+
+
+def chaos_cfg(ckpt_dir, **kw):
+    base = dict(punct_interval=INTERVAL, chunk_intervals=2,
+                snapshot_every=4 if ckpt_dir else 0,
+                ckpt_dir=str(ckpt_dir) if ckpt_dir else None, watermark=WM,
+                source_retries=2, retry_backoff_s=0.01,
+                watchdog_factor=4.0, watchdog_min_s=1.0,
+                watchdog_grace_s=20.0,
+                straggler=StragglerPolicy(deadline_s=0.5))
+    base.update(kw)
+    return ServiceConfig(**base)
+
+
+def assert_ledger_balanced(stats):
+    a = stats["assembly"]
+    assert a["arrived"] == a["assembled"] + a["dropped"] + a["pending"], a
+
+
+# ---------------------------------------------------------------------------
+# 1. the chaos sweep: seeded schedules x apps x schemes
+# ---------------------------------------------------------------------------
+def run_chaos_case(app_name, scheme, seed, ckpt_dir):
+    """One chaos case: run under a seeded fault schedule, then prove the
+    crash → restore → replay continuation is bitwise identical to the
+    uninterrupted reference and every accounting record balances."""
+    app, eng = mk_engine(app_name, scheme)
+    # uninterrupted reference (also warms every chunk-shape compile, so
+    # the watchdog grace window never races a cold jit below)
+    ref = StreamService(eng, ServiceConfig(
+        punct_interval=INTERVAL, chunk_intervals=2, watermark=WM)).run(
+            mk_source(app))
+
+    sched = random_schedule(seed, n_pulls=15, n_chunks=5, n_snapshots=2,
+                            hang_s=2.5, stall_s=0.05)
+    plane = FaultPlane(sched)
+    cfg = chaos_cfg(ckpt_dir)
+    svc = StreamService(eng, cfg)
+    crashed = None
+    try:
+        rec = svc.run(mk_source(app), faults=plane)
+    except Exception as e:
+        crashed = svc.last_run
+        stats = crashed.stats
+        assert stats is not None and stats["crashed"], \
+            f"crash without structured stats: {type(e).__name__}: {e}"
+        assert conservation_ok(stats), stats
+        assert_ledger_balanced(stats)
+        assert stats["faults"], "crashed but no fault recorded as fired"
+        # the committed prefix already matched the reference bitwise
+        if crashed.outputs:
+            assert_outputs_identical(crashed.outputs,
+                                     ref.outputs[: len(crashed.outputs)])
+        try:
+            rec = StreamService(eng, cfg).resume(mk_source(app))
+        except FileNotFoundError:
+            # crashed before any valid snapshot: replay from scratch
+            rec = StreamService(eng, cfg).run(mk_source(app))
+
+    snap = rec.stats["replayed"] // INTERVAL
+    np.testing.assert_array_equal(rec.final_values, ref.final_values)
+    assert_outputs_identical(rec.outputs, ref.outputs[snap:])
+    assert conservation_ok(rec.stats)
+    assert_ledger_balanced(rec.stats)
+    return plane, crashed
+
+
+@pytest.mark.parametrize("app_name,scheme,seed", [
+    ("gs", "tstream", 0),
+    ("gs", "tstream", 1),
+    ("gs", "tstream", 2),
+    ("gs", "tstream", 3),
+    ("gs", "tstream", 4),
+    ("sl", "tstream", 1),     # gated lockstep path
+    ("sl", "tstream", 5),
+    ("gs", "mvlk", 2),        # MVLK scheme
+    ("gs", "mvlk", 6),
+])
+def test_chaos_schedule(app_name, scheme, seed, tmp_path):
+    run_chaos_case(app_name, scheme, seed, tmp_path / f"s{seed}")
+
+
+def test_chaos_fires_every_site_across_sweep(tmp_path):
+    """The seeds above aren't vacuous: across a seed range the generator
+    schedules every site at least once."""
+    sites = set()
+    for seed in range(16):
+        for f in random_schedule(seed, n_pulls=15, n_chunks=5,
+                                 n_snapshots=2):
+            sites.add(f.site)
+    assert sites == set(SITE_KINDS), sites
+
+
+# ---------------------------------------------------------------------------
+# 2. snapshot validity: verify / fallback / debris
+# ---------------------------------------------------------------------------
+def _save_ref_ckpt(d, step=4):
+    return save_checkpoint(str(d), step,
+                           dict(values=np.arange(24.0).reshape(4, 6)),
+                           extra_meta=dict(intervals_done=step,
+                                           punct_interval=INTERVAL))
+
+
+@pytest.mark.parametrize("kind", ["torn_manifest", "corrupt_leaf",
+                                  "truncate_leaf"])
+def test_verify_detects_corruption(tmp_path, kind):
+    path = _save_ref_ckpt(tmp_path)
+    assert verify_checkpoint(str(tmp_path), 4) == (True, "ok")
+    corrupt_snapshot(path, kind)
+    if kind == "torn_manifest":
+        # an unparseable manifest is invisible: the step no longer exists
+        assert checkpoint_steps(str(tmp_path)) == []
+    else:
+        ok, why = verify_checkpoint(str(tmp_path), 4)
+        assert not ok and "leaf" in why
+
+
+def test_debris_never_shadows_valid_snapshot(tmp_path):
+    path = _save_ref_ckpt(tmp_path, step=4)
+    corrupt_snapshot(path, "debris")      # manifest-less step_00000005
+    assert os.path.isdir(str(tmp_path / "step_00000005"))
+    assert latest_step(str(tmp_path)) == 4
+    assert latest_valid_step(str(tmp_path)) == 4
+
+
+def test_latest_valid_skips_corrupt_latest(tmp_path):
+    _save_ref_ckpt(tmp_path, step=4)
+    p8 = _save_ref_ckpt(tmp_path, step=8)
+    corrupt_snapshot(p8, "corrupt_leaf")
+    assert latest_step(str(tmp_path)) == 8          # manifest still reads
+    assert latest_valid_step(str(tmp_path)) == 4    # but it doesn't verify
+    with pytest.raises(ValueError, match="verification"):
+        load_checkpoint(str(tmp_path), 8,
+                        dict(values=np.zeros((4, 6))), verify=True)
+
+
+@pytest.mark.parametrize("kind", ["torn_manifest", "corrupt_leaf",
+                                  "truncate_leaf", "debris"])
+def test_resume_falls_back_past_corrupt_latest(tmp_path, kind):
+    """Corruption of the latest snapshot NEVER leaks an exception out of
+    resume — it restores the previous valid snapshot and the continuation
+    is still bitwise identical to the uninterrupted run."""
+    app, eng = mk_engine()
+    ref = StreamService(eng, ServiceConfig(
+        punct_interval=INTERVAL, chunk_intervals=2, watermark=WM)).run(
+            mk_source(app))
+    cfg = ServiceConfig(punct_interval=INTERVAL, chunk_intervals=2,
+                        snapshot_every=4, ckpt_dir=str(tmp_path),
+                        watermark=WM)
+    svc = StreamService(eng, cfg)
+    with pytest.raises(RuntimeError, match="injected failure"):
+        svc.run(mk_source(app), crash_after_interval=8)
+    assert svc.last_run.snapshots == [4, 8]
+    corrupt_snapshot(str(tmp_path / "step_00000008"), kind)
+
+    rec = StreamService(eng, cfg).resume(mk_source(app))
+    expect_from = 8 if kind == "debris" else 4   # debris damages only step 9
+    assert rec.stats["replayed"] // INTERVAL == expect_from
+    np.testing.assert_array_equal(rec.final_values, ref.final_values)
+    assert_outputs_identical(rec.outputs, ref.outputs[expect_from:])
+
+
+# ---------------------------------------------------------------------------
+# 3. retention (keep_last)
+# ---------------------------------------------------------------------------
+def test_keep_last_prunes_after_publish(tmp_path):
+    app, eng = mk_engine()
+    cfg = ServiceConfig(punct_interval=INTERVAL, chunk_intervals=2,
+                        snapshot_every=2, ckpt_dir=str(tmp_path),
+                        watermark=WM, keep_last=2)
+    rec = StreamService(eng, cfg).run(mk_source(app))
+    assert rec.snapshots == [2, 4, 6, 8, 10]
+    assert checkpoint_steps(str(tmp_path)) == [10, 8]
+    # resume still works from the retained tail
+    ref = StreamService(eng, ServiceConfig(
+        punct_interval=INTERVAL, chunk_intervals=2, watermark=WM)).run(
+            mk_source(app))
+    rec2 = StreamService(eng, cfg).resume(mk_source(app))
+    assert rec2.stats["replayed"] // INTERVAL == 10
+    np.testing.assert_array_equal(rec2.final_values, ref.final_values)
+
+
+# ---------------------------------------------------------------------------
+# 4. source retry/backoff + straggler backfill alarm
+# ---------------------------------------------------------------------------
+def test_source_retry_recovers_transient_faults(tmp_path):
+    app, eng = mk_engine()
+    ref = StreamService(eng, ServiceConfig(
+        punct_interval=INTERVAL, chunk_intervals=2, watermark=WM)).run(
+            mk_source(app))
+    plane = FaultPlane([Fault(SOURCE_PULL, 1, "raise"),
+                        Fault(SOURCE_PULL, 5, "raise"),
+                        Fault(SOURCE_PULL, 6, "raise")])
+    cfg = chaos_cfg(None, source_retries=2, retry_backoff_s=0.001)
+    rec = StreamService(eng, cfg).run(mk_source(app), faults=plane)
+    # retried pulls lose nothing: the run is bitwise identical
+    np.testing.assert_array_equal(rec.final_values, ref.final_values)
+    assert_outputs_identical(rec.outputs, ref.outputs)
+    assert rec.stats["source"]["retries"] == 3
+    assert rec.stats["source"]["backoff_s"] > 0
+    assert len(plane.fired) == 3
+
+
+def test_source_retry_exhaustion_crashes_with_stats(tmp_path):
+    app, eng = mk_engine()
+    plane = FaultPlane([Fault(SOURCE_PULL, 3, "raise"),
+                        Fault(SOURCE_PULL, 4, "raise")])
+    cfg = chaos_cfg(None, source_retries=1, retry_backoff_s=0.001)
+    svc = StreamService(eng, cfg)
+    with pytest.raises(TransientSourceError):
+        svc.run(mk_source(app), faults=plane)
+    stats = svc.last_run.stats
+    assert stats["crashed"]
+    assert stats["error"]["type"] == "TransientSourceError"
+    assert conservation_ok(stats)
+    assert_ledger_balanced(stats)
+
+
+def test_backfill_alarm_trips_and_logs_once(tmp_path, caplog):
+    """Satellite: every pull missing the (zero) deadline trips the
+    straggler backfill-ratio alarm — recorded in stats["source"] and
+    logged exactly once per run."""
+    app, eng = mk_engine()
+    cfg = chaos_cfg(None, straggler=StragglerPolicy(deadline_s=0.0,
+                                                    max_backfill_ratio=0.2))
+    with caplog.at_level(logging.WARNING, logger="repro.runtime.service"):
+        rec = StreamService(eng, cfg).run(mk_source(app))
+    src = rec.stats["source"]
+    assert src["deadline_misses"] == src["pulls"] > 0
+    assert src["alarm"] and src["backfill_ratio"] > 0.2
+    alarms = [r for r in caplog.records if "backfill" in r.getMessage()]
+    assert len(alarms) == 1
+
+
+def test_no_alarm_on_clean_run(tmp_path):
+    app, eng = mk_engine()
+    cfg = chaos_cfg(None)
+    rec = StreamService(eng, cfg).run(mk_source(app))
+    src = rec.stats["source"]
+    assert src["retries"] == 0 and not src["alarm"]
+    assert src["pulls"] == (N_EVENTS + 10) // 11
+
+
+# ---------------------------------------------------------------------------
+# 5. executor watchdog + error path
+# ---------------------------------------------------------------------------
+def test_watchdog_detects_hang_and_recovers_bitwise(tmp_path):
+    """An executor hang is detected within the watchdog budget, every
+    committable in-flight chunk drains, an *emergency* punctuation-aligned
+    snapshot is published, and resume from it is bitwise exact."""
+    app, eng = mk_engine()
+    ref = StreamService(eng, ServiceConfig(
+        punct_interval=INTERVAL, chunk_intervals=2, watermark=WM)).run(
+            mk_source(app))    # warms the chunk compiles
+    plane = FaultPlane([Fault(EXECUTOR_HANG, 2, "hang", duration_s=60.0)])
+    cfg = chaos_cfg(tmp_path, watchdog_min_s=0.5, watchdog_grace_s=2.0)
+    svc = StreamService(eng, cfg)
+    with pytest.raises(ExecutorHungError):
+        svc.run(mk_source(app), faults=plane)
+    stats = svc.last_run.stats
+    err = stats["error"]
+    assert err["type"] == "ExecutorHungError" and not err["hung_thread"]
+    # hang hit after the chunk ending interval 6 dispatched: the drain
+    # committed it and the emergency snapshot landed at that boundary
+    assert err["emergency_snapshot"] == 6
+    assert svc.last_run.snapshots == [4, 6]
+    assert len(svc.last_run.outputs) == 6     # intervals 0..6 committed
+    assert conservation_ok(stats)
+    assert_ledger_balanced(stats)
+    assert stats["faults"] == [dict(site=EXECUTOR_HANG, visit=2,
+                                    kind="hang", duration_s=60.0)]
+
+    rec = StreamService(eng, cfg).resume(mk_source(app))
+    assert rec.stats["replayed"] // INTERVAL == 6
+    np.testing.assert_array_equal(rec.final_values, ref.final_values)
+    assert_outputs_identical(rec.outputs, ref.outputs[6:])
+
+
+def test_executor_exception_surfaces_with_stats_and_no_leaked_threads(
+        tmp_path):
+    """Satellite: an exception on the executor thread mid-chunk surfaces
+    to the caller with the merged stats intact — and neither the executor
+    nor the watchdog thread leaks."""
+    app, eng = mk_engine()
+    plane = FaultPlane([Fault("executor.crash", 1, "crash")])
+    cfg = chaos_cfg(tmp_path)
+    svc = StreamService(eng, cfg)
+    with pytest.raises(InjectedCrashError):
+        svc.run(mk_source(app), faults=plane)
+    stats = svc.last_run.stats
+    assert stats["crashed"] and stats["error"]["type"] == "InjectedCrashError"
+    assert not stats["error"]["hung_thread"]
+    assert conservation_ok(stats)
+    assert_ledger_balanced(stats)
+    assert not [t for t in threading.enumerate()
+                if t.name.startswith("stream-service")], \
+        "leaked a service thread"
+
+
+def test_escalation_excludes_snapshots():
+    """Automatic slack escalation changes drop behavior mid-run, so it is
+    statically incompatible with exact snapshot/replay."""
+    with pytest.raises(AssertionError, match="not replayable"):
+        ServiceConfig(punct_interval=INTERVAL, chunk_intervals=2,
+                      snapshot_every=4, ckpt_dir="/tmp/x",
+                      escalate_overflow=2)
+
+
+# ---------------------------------------------------------------------------
+# 6. schedule generator properties (hypothesis)
+# ---------------------------------------------------------------------------
+def _schedule_valid(sched, n_pulls, n_chunks, n_snapshots):
+    ranges = {SOURCE_PULL: n_pulls, "executor.crash": n_chunks,
+              EXECUTOR_HANG: n_chunks, SNAPSHOT_PUBLISH: n_snapshots}
+    seen = set()
+    hangs = 0
+    for f in sched:
+        assert f.site in SITE_KINDS and f.kind in SITE_KINDS[f.site]
+        assert 0 <= f.at < ranges[f.site]
+        assert (f.site, f.at) not in seen
+        seen.add((f.site, f.at))
+        hangs += f.kind == "hang"
+    assert hangs <= 1, "more than one hang per schedule"
+
+
+def test_schedule_generator_basic():
+    sched = random_schedule(3, n_pulls=15, n_chunks=5, n_snapshots=2)
+    assert sched == random_schedule(3, n_pulls=15, n_chunks=5,
+                                    n_snapshots=2)
+    _schedule_valid(sched, 15, 5, 2)
+    assert schedule_from_json(schedule_to_json(sched)) == sched
+    assert random_schedule(11, n_pulls=0, n_chunks=0, n_snapshots=0) == []
+
+
+# guarded import (not importorskip: that would skip the whole module and
+# with it the chaos sweep above on an env without hypothesis)
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # pragma: no cover - hypothesis is in requirements-dev
+    st = None
+
+if st is not None:
+    @settings(max_examples=50, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n_pulls=st.integers(0, 40),
+           n_chunks=st.integers(0, 12), n_snapshots=st.integers(0, 6))
+    def test_schedule_generator_deterministic_and_valid(
+            seed, n_pulls, n_chunks, n_snapshots):
+        a = random_schedule(seed, n_pulls=n_pulls, n_chunks=n_chunks,
+                            n_snapshots=n_snapshots)
+        b = random_schedule(seed, n_pulls=n_pulls, n_chunks=n_chunks,
+                            n_snapshots=n_snapshots)
+        assert a == b, "schedule is not a pure function of its seed"
+        _schedule_valid(a, n_pulls, n_chunks, n_snapshots)
+        assert schedule_from_json(schedule_to_json(a)) == a
+        if n_pulls or n_chunks or n_snapshots:
+            assert len(a) >= 1, \
+                "non-empty site ranges must schedule a fault"
+
+
+# ---------------------------------------------------------------------------
+# 7. sharded chaos (8 forced host devices, subprocess)
+# ---------------------------------------------------------------------------
+def test_faults_sharded():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(os.path.dirname(__file__),
+                                      "faults_worker.py")],
+        capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    verdicts = json.loads(proc.stdout.strip().splitlines()[-1])
+    bad = {k: v for k, v in verdicts.items() if not v.get("ok")}
+    assert not bad, bad
