@@ -15,12 +15,20 @@ Two row families, machine-readable into ``BENCH_restructure.json`` via
   its measured win regime) against the sort-based plan it replaced
   (``packed_stable_sort`` + a separate ``segment_sum`` for the
   capacities), at n_route = 8 destinations.
+* ``fused`` rows — the megakernel rung A/B: the staged
+  ``plan → coefs → execute`` pipeline (full chain geometry + the
+  materialized [N, W] coefficient arrays) against the fused
+  ``fused_chain_eval`` pipeline (geometry-free light plan, coefficients
+  expanded from the two-column LUT form in place), interleaved at the
+  plan-grid shapes that sit inside the megakernel's slot band.  The
+  measured crossover is what ``kernels.autotune.MEGA_BOUNDS`` encodes.
 
 The minimum over iterations is the headline estimator (external load only
 adds time — same rationale as ``timeit``; DESIGN.md §8.3).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from functools import partial
 
@@ -30,8 +38,8 @@ import numpy as np
 
 from repro.core.ownership import bucket_by_owner
 from repro.core.restructure import (commit_from_histogram, commit_index,
-                                    packed_sort_fits, restructure,
-                                    restructure_path)
+                                    megakernel_engaged, packed_sort_fits,
+                                    restructure, restructure_path)
 from repro.core.types import OpBatch
 
 
@@ -100,6 +108,69 @@ def _grids(quick: bool, smoke: bool):
             [40960, 163840, 655360, 1310720, 2621440], 11)
 
 
+def _fused_rows(rng, plan_grid, iters):
+    """Megakernel-rung A/B: the full staged chain-evaluation pipeline vs
+    the fused one, both on the same partition backbone (use_pallas=False:
+    on hosts the fused win is structural — no chain geometry, no [N, W]
+    coefficient arrays — and the XLA ref is what the rung dispatches)."""
+    from repro.core.engines import (simple_affine_luts, tstream_scan_coefs,
+                                    tstream_scan_execute, tstream_scan_plan)
+    from repro.core.types import F_ADD, F_NOP, F_PUT, F_READ, make_store
+    from repro.kernels.autotune import mega_bounds
+    from repro.kernels.megakernel import fused_chain_eval
+
+    funs = (F_NOP, F_READ, F_PUT, F_ADD)
+    a_lut, b_lut = simple_affine_luts(funs)
+    band = mega_bounds()
+    rows = []
+    for n, slots_list in plan_grid:
+        for s in slots_list:
+            if s + 1 > band["max_buckets"]:
+                continue
+            store = make_store([s], 4)
+            pad_uid = store.pad_uid
+            ops = _mk_ops(rng, n, s)
+            ops = dataclasses.replace(ops, fun=jnp.asarray(
+                rng.integers(0, len(funs), n).astype(np.int32)))
+            values = store.values
+
+            @jax.jit
+            def staged(values, ops):
+                pres = restructure(ops, pad_uid, rowmajor_ts=True,
+                                   light=True, method="partition")
+                plan = tstream_scan_plan(store, ops, funs,
+                                         prestructured=pres)
+                plan = tstream_scan_coefs(plan, use_pallas=False)
+                return tstream_scan_execute(values, plan, pad_uid,
+                                            raw=True)
+
+            @jax.jit
+            def fused(values, ops):
+                sops, ch = restructure(ops, pad_uid, rowmajor_ts=True,
+                                       light=True, method="partition",
+                                       geometry=False)
+                return fused_chain_eval(values, sops, ch, pad_uid,
+                                        a_lut=a_lut, b_lut=b_lut,
+                                        use_pallas=False)
+
+            cell = _wall_min_interleaved(
+                dict(staged=lambda: staged(values, ops),
+                     fused=lambda: fused(values, ops)), iters=iters)
+            engaged = megakernel_engaged(n, s + 1, method="auto",
+                                         has_max=False, funs_simple=True)
+            rows.append(dict(
+                fig="restructure", kind="fused", scheme="staged",
+                n=n, n_slots=s, shape=f"N{n}-S{s}",
+                wall_s=cell["staged"], events_per_s=n / cell["staged"]))
+            rows.append(dict(
+                fig="restructure", kind="fused", scheme="megakernel",
+                n=n, n_slots=s, shape=f"N{n}-S{s}",
+                auto_engaged=bool(engaged),
+                wall_s=cell["fused"], events_per_s=n / cell["fused"],
+                mega_speedup_vs_staged=cell["staged"] / cell["fused"]))
+    return rows
+
+
 def run(quick: bool = True, smoke: bool = False):
     rng = np.random.default_rng(23)
     plan_grid, ex_ns, iters = _grids(quick, smoke)
@@ -129,6 +200,8 @@ def run(quick: bool = True, smoke: bool = False):
                     wall_s=cell[m], events_per_s=n / cell[m],
                     **({"partition_speedup_vs_sort":
                         sort_ref / cell["partition"]} if i == 0 else {})))
+
+    rows.extend(_fused_rows(rng, plan_grid, iters))
 
     n_route = 8
     for n in ex_ns:

@@ -1,9 +1,15 @@
 """§Roofline: three-term roofline per (arch × shape × mesh) from the
 dry-run JSONs (results/dryrun/*.json).
 
-  compute    = HLO_FLOPs_per_device / peak_FLOPs        (197 TF/s bf16)
-  memory     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
-  collective = wire_bytes_per_device / link_bw          (~50 GB/s ICI)
+  compute    = HLO_FLOPs_per_device / peak_FLOPs
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = wire_bytes_per_device / link_bw
+
+Peaks come from a per-``device_kind`` table (``DEVICE_PEAKS``) resolved
+against the running backend by default — the old hardcoded TPU-v5e
+constants silently mispriced every other host, including the CPU CI
+boxes.  Any entry can be overridden from the CLI
+(``--peak-flops/--hbm-bw/--link-bw``) or per call via ``device_peaks``.
 
 HLO_FLOPs/bytes are trip-count-weighted per-device figures (see
 launch/hlo_analysis.py — XLA's cost_analysis counts loop bodies once).
@@ -17,9 +23,26 @@ import json
 import os
 from typing import Dict, List, Optional
 
-PEAK_FLOPS = 197e12      # bf16 per chip
-HBM_BW = 819e9           # bytes/s
-LINK_BW = 50e9           # bytes/s per ICI link
+# peak (FLOP/s, HBM bytes/s, per-link bytes/s) by device kind.  Keys are
+# matched case-insensitively by prefix (``"tpu v5"`` covers
+# ``"TPU v5e"``/``"TPU v5p"`` unless a longer key matches first), with
+# "cpu" as the fallback row for hosts.  Sources: public TPU spec sheets;
+# the cpu row is a deliberately modest desktop-class estimate (AVX2 f32,
+# dual-channel DDR4, inter-socket UPI) so host rooflines stay meaningful
+# rather than absurdly compute-bound.
+DEVICE_PEAKS: Dict[str, Dict[str, float]] = {
+    "tpu v4":  dict(peak_flops=275e12, hbm_bw=1228e9, link_bw=50e9),
+    "tpu v5e": dict(peak_flops=197e12, hbm_bw=819e9,  link_bw=50e9),
+    "tpu v5p": dict(peak_flops=459e12, hbm_bw=2765e9, link_bw=100e9),
+    "tpu v6":  dict(peak_flops=918e12, hbm_bw=1640e9, link_bw=100e9),
+    "cpu":     dict(peak_flops=1e12,   hbm_bw=40e9,   link_bw=20e9),
+}
+
+# legacy module constants (== the "tpu v5e" row, what the old hardcoded
+# numbers were) kept for direct importers
+PEAK_FLOPS = DEVICE_PEAKS["tpu v5e"]["peak_flops"]
+HBM_BW = DEVICE_PEAKS["tpu v5e"]["hbm_bw"]
+LINK_BW = DEVICE_PEAKS["tpu v5e"]["link_bw"]
 
 SHAPE_TOKENS = {
     "train_4k": 4096 * 256,
@@ -27,6 +50,32 @@ SHAPE_TOKENS = {
     "decode_32k": 128,        # one token per sequence
     "long_500k": 1,
 }
+
+
+def device_peaks(device_kind: Optional[str] = None,
+                 override: Optional[Dict[str, float]] = None
+                 ) -> Dict[str, float]:
+    """Resolve the peak row for ``device_kind`` (default: the running
+    backend's ``jax.devices()[0].device_kind``), longest prefix match,
+    "cpu" fallback; ``override`` keys replace resolved entries."""
+    if device_kind is None:
+        try:
+            import jax
+            device_kind = jax.devices()[0].device_kind
+        except Exception:
+            device_kind = "cpu"
+    kind = str(device_kind).lower()
+    row = None
+    for key in sorted(DEVICE_PEAKS, key=len, reverse=True):
+        if kind.startswith(key) or key.startswith(kind):
+            row = dict(DEVICE_PEAKS[key])
+            break
+    if row is None:
+        row = dict(DEVICE_PEAKS["cpu"])
+    if override:
+        row.update({k: float(v) for k, v in override.items()
+                    if v is not None})
+    return row
 
 
 def model_flops(rec: dict) -> float:
@@ -45,20 +94,26 @@ def load_cells(dryrun_dir: str = "results/dryrun") -> List[dict]:
     return cells
 
 
-def roofline_row(rec: dict) -> Optional[dict]:
+def roofline_row(rec: dict,
+                 peaks: Optional[Dict[str, float]] = None
+                 ) -> Optional[dict]:
     if rec.get("skipped") or rec.get("error"):
         return None
+    if peaks is None:
+        # dry-run records carry the arch they were analyzed for; fall
+        # back to the running backend only when they don't
+        peaks = device_peaks(rec.get("device_kind") or rec.get("arch"))
     ndev = rec["n_devices"]
-    t_comp = rec["hlo_flops"] / PEAK_FLOPS
-    t_mem = rec["hlo_bytes_written"] / HBM_BW
-    t_coll = rec["wire_bytes_per_device"] / LINK_BW
+    t_comp = rec["hlo_flops"] / peaks["peak_flops"]
+    t_mem = rec["hlo_bytes_written"] / peaks["hbm_bw"]
+    t_coll = rec["wire_bytes_per_device"] / peaks["link_bw"]
     terms = dict(compute=t_comp, memory=t_mem, collective=t_coll)
     bottleneck = max(terms, key=terms.get)
     mf = model_flops(rec)
     useful = mf / max(rec["hlo_flops"] * ndev, 1.0)
     # roofline fraction: useful-compute time / bound (the score axis)
     bound = max(terms.values())
-    frac = (mf / ndev / PEAK_FLOPS) / max(bound, 1e-12)
+    frac = (mf / ndev / peaks["peak_flops"]) / max(bound, 1e-12)
     return dict(
         arch=rec["arch"], shape=rec["shape"],
         mesh="2x16x16" if rec["multi_pod"] else "16x16",
@@ -71,12 +126,13 @@ def roofline_row(rec: dict) -> Optional[dict]:
     )
 
 
-def table(dryrun_dir: str = "results/dryrun", multi_pod: bool = False):
+def table(dryrun_dir: str = "results/dryrun", multi_pod: bool = False,
+          peaks: Optional[Dict[str, float]] = None):
     rows = []
     for rec in load_cells(dryrun_dir):
         if rec.get("multi_pod") != multi_pod:
             continue
-        r = roofline_row(rec)
+        r = roofline_row(rec, peaks=peaks)
         if r:
             rows.append(r)
     return rows
@@ -87,3 +143,29 @@ def run(quick: bool = True):
     for r in table(multi_pod=False):
         rows.append(dict(fig="roofline", **r))
     return rows
+
+
+def main(argv=None):
+    import argparse
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--dryrun-dir", default="results/dryrun")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--device-kind", default=None,
+                   help="peak table row to price against (default: the "
+                        "record's arch, else the running backend)")
+    p.add_argument("--peak-flops", type=float, default=None)
+    p.add_argument("--hbm-bw", type=float, default=None)
+    p.add_argument("--link-bw", type=float, default=None)
+    args = p.parse_args(argv)
+    override = dict(peak_flops=args.peak_flops, hbm_bw=args.hbm_bw,
+                    link_bw=args.link_bw)
+    peaks = None
+    if args.device_kind or any(v is not None for v in override.values()):
+        peaks = device_peaks(args.device_kind, override=override)
+    rows = table(args.dryrun_dir, multi_pod=args.multi_pod, peaks=peaks)
+    print(json.dumps(rows, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

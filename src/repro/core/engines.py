@@ -97,6 +97,21 @@ def affine_coeffs(funs: Tuple[FunSpec, ...], fun_id: jnp.ndarray,
     return jax.vmap(one)(fun_id, operand)
 
 
+def simple_affine_luts(funs: Tuple[FunSpec, ...]):
+    """(a_lut f32[n_funs], b_lut bool[n_funs]) when EVERY fun declares a
+    simple affine shape (a ∈ {0, 1}, b ∈ {0, operand}; non-affine funs
+    count as identity) — the whole-app precondition for the fused
+    megakernel, whose in-VMEM coefficient expansion is these two gathers.
+    Returns None when any fun is not simple-affine.
+    """
+    simple = [f.affine_simple if f.affine is not None else (1.0, False)
+              for f in funs]
+    if not all(s is not None for s in simple):
+        return None
+    return (jnp.asarray([s[0] for s in simple], jnp.float32),
+            jnp.asarray([s[1] for s in simple]))
+
+
 def _gate_open(gate: jnp.ndarray, success_flat: jnp.ndarray) -> jnp.ndarray:
     """CFun gating: open when ungated, else the mate op's recorded success."""
     return jnp.where(gate >= 0, jnp.take(success_flat, jnp.maximum(gate, 0)), True)
@@ -218,19 +233,22 @@ def tstream_scan_plan(store: StateStore, ops: OpBatch,
                     commit_pos=commit_pos, commit_ok=commit_ok)
 
 
-def tstream_scan_coefs(plan: ScanPlan, *, use_pallas: bool = False) -> ScanPlan:
+def tstream_scan_coefs(plan: ScanPlan, *, use_pallas: bool = False,
+                       block_rows: Optional[int] = None) -> ScanPlan:
     """Segmented scans of the planned coefficients.
 
     Exclusive scans give each op's ``pre``; composing the op's own raw
     coefficient on top gives the *inclusive* scans and thereby ``post``
-    without any per-op Fun dispatch at execution time.
+    without any per-op Fun dispatch at execution time.  ``block_rows``
+    forces the Pallas kernel's block shape (None -> autotuned).
     """
     if use_pallas:
         from repro.kernels.segscan import ops as segscan_ops
         A, B = segscan_ops.segscan_affine(plan.af, plan.bf,
-                                          plan.ch.seg_start, exclusive=True)
+                                          plan.ch.seg_start, exclusive=True,
+                                          block_rows=block_rows)
         M = (segscan_ops.segscan_max(plan.mx, plan.ch.seg_start,
-                                     exclusive=True)
+                                     exclusive=True, block_rows=block_rows)
              if plan.mx is not None else None)
     else:
         A, B = segmented_scan_affine(plan.af, plan.bf, plan.ch.seg_start,
@@ -250,11 +268,13 @@ def _compose_inclusive(plan: ScanPlan, A, B, M) -> ScanPlan:
 
 
 def tstream_scan_coefs_stream(plan_all: ScanPlan, *,
-                              use_pallas: bool = False) -> ScanPlan:
+                              use_pallas: bool = False,
+                              block_rows: Optional[int] = None) -> ScanPlan:
     """Coefficient scans for a whole stream of stacked [n_intervals, N]
     plans.  Non-Pallas: vmapped per-interval scans (bit-identical to the
     per-interval driver).  Pallas: ONE kernel dispatch over the flattened
     stream — per-interval seg_start flags isolate the scans.
+    ``block_rows`` forces the kernel block shape (None -> autotuned).
     """
     if not use_pallas:
         return jax.vmap(tstream_scan_coefs)(plan_all)
@@ -263,12 +283,14 @@ def tstream_scan_coefs_stream(plan_all: ScanPlan, *,
     flags = plan_all.ch.seg_start.reshape(bn * n)
     A, B = segscan_ops.segscan_affine(plan_all.af.reshape(bn * n, w),
                                       plan_all.bf.reshape(bn * n, w),
-                                      flags, exclusive=True)
+                                      flags, exclusive=True,
+                                      block_rows=block_rows)
     A, B = A.reshape(bn, n, w), B.reshape(bn, n, w)
     M = None
     if plan_all.mx is not None:
         M = segscan_ops.segscan_max(plan_all.mx.reshape(bn * n, w), flags,
-                                    exclusive=True).reshape(bn, n, w)
+                                    exclusive=True,
+                                    block_rows=block_rows).reshape(bn, n, w)
     return _compose_inclusive(plan_all, A, B, M)
 
 

@@ -26,6 +26,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from .types import OpBatch
 
 log = logging.getLogger(__name__)
@@ -75,29 +76,74 @@ class Chains:
 # ---------------------------------------------------------------------------
 # Path selection: partition -> packed sort (u32/u64) -> lexsort
 # ---------------------------------------------------------------------------
-RESTRUCTURE_METHODS = ("auto", "partition", "packed", "lexsort")
+RESTRUCTURE_METHODS = ("auto", "partition", "packed", "lexsort",
+                       "megakernel")
 
-# Counting-partition auto bounds — the measured host-backend crossover
-# (BENCH_restructure.json): the partition's per-element cost is ~K one-hot
-# passes plus one inversion scatter, the packed sort's is one comparison
-# sort plus a binary-search pass.  On CPU XLA the partition wins for
-# compact key spaces once N is large enough that the sort's extra log
-# factor dominates the partition's constant costs (1.3-1.8x for the
-# owner-routing shape at >=655k rows; wall-clock parity within host noise
-# (0.9-1.1x) for a 9-bucket store at 512k, trending with N — engaged
-# there because the commit map comes free and the structural cost is
-# O(N + K) vs O(N log N)), and loses for large sparse stores, so "auto"
-# only engages it inside that regime.  Forcing ``method="partition"``
-# bypasses the bound (parity tests, TPU deployments where the
-# bitonic-sort baseline moves the crossover far to the right).
-PARTITION_MAX_BUCKETS = 16
-PARTITION_MIN_ROWS = 1 << 18
+# Counting-partition auto bounds — the measured crossover for the CURRENT
+# device kind, resolved from ``kernels/autotune.LADDER_BOUNDS``.  On this
+# repo's CPU hosts the row is the measured BENCH_restructure.json
+# crossover (1.3-1.8x for the owner-routing shape at >=655k rows;
+# wall-clock parity within host noise (0.9-1.1x) for a 9-bucket store at
+# 512k, trending with N — engaged there because the commit map comes free
+# and the structural cost is O(N + K) vs O(N log N); loses for large
+# sparse stores), so "auto" only engages the partition inside that
+# regime.  On accelerators the jnp.sort baseline is a bitonic network,
+# which moves the crossover far right — the autotune table carries
+# per-device rows instead of this one CPU measurement.  Forcing
+# ``method="partition"`` bypasses the bound (parity tests, deployments).
+PARTITION_MAX_BUCKETS, PARTITION_MIN_ROWS = autotune.ladder_bounds("cpu")
 
 
 def partition_fits(n_rows: int, n_buckets: int) -> bool:
-    """Whether "auto" picks the one-pass counting partition backbone."""
-    return (n_buckets <= PARTITION_MAX_BUCKETS
-            and int(n_rows) >= PARTITION_MIN_ROWS)
+    """Whether "auto" picks the one-pass counting partition backbone
+    (device-derived bounds; see ``kernels/autotune.LADDER_BOUNDS``)."""
+    max_buckets, min_rows = autotune.ladder_bounds()
+    return n_buckets <= max_buckets and int(n_rows) >= min_rows
+
+
+def megakernel_engaged(n_rows: int, n_slots_incl_pad: int, *,
+                       method: str, has_max: bool,
+                       funs_simple: bool) -> bool:
+    """Whether the fused drivers evaluate chains through the fused
+    partition→segscan→commit megakernel (``kernels/megakernel``).
+
+    Structural eligibility first — the fused pipeline only expresses
+    simple-affine tables (``FunSpec.affine_simple``; its one-hot
+    gather/scatter is exact only for finite values, which ±inf max
+    neutrals break) — then either an explicit ``method="megakernel"``
+    force or, under "auto", the measured per-device win band
+    (``kernels/autotune.MEGA_BOUNDS``).  Ineligible forces fall back to
+    the staged path (bit-identical by construction), logged once.
+    """
+    eligible = (not has_max) and funs_simple
+    if method == "megakernel":
+        if not eligible:
+            _warn_mega_fallback(has_max, funs_simple)
+        return eligible
+    if method != "auto" or not eligible:
+        return False
+    band = autotune.mega_bounds()
+    min_rows = band.get("min_rows")
+    return (min_rows is not None and int(n_rows) >= int(min_rows)
+            and n_slots_incl_pad <= int(band.get("max_buckets", 0)))
+
+
+_MEGA_FALLBACK_WARNED = set()
+
+
+def _warn_mega_fallback(has_max: bool, funs_simple: bool) -> None:
+    key = (has_max, funs_simple)
+    if key in _MEGA_FALLBACK_WARNED:
+        return
+    _MEGA_FALLBACK_WARNED.add(key)
+    why = []
+    if has_max:
+        why.append("store has max-type tables (-inf neutrals break the "
+                   "kernel's one-hot gather exactness)")
+    if not funs_simple:
+        why.append("app registers non-simple affine functions")
+    log.warning("restructure: method='megakernel' forced but %s — using the "
+                "staged partition path (bit-identical)", "; ".join(why))
 
 
 def packed_sort_fits(n_rows: int, max_major: int, bits: int = 32) -> bool:
@@ -124,13 +170,16 @@ def restructure_path(n: int, pad_uid: int, *, rowmajor_ts: bool,
     if method not in RESTRUCTURE_METHODS:
         raise ValueError(f"method={method!r}; choose from "
                          f"{RESTRUCTURE_METHODS}")
-    if method in ("partition", "packed") and not rowmajor_ts:
+    if method in ("partition", "packed", "megakernel") and not rowmajor_ts:
         raise ValueError(
-            f"method={method!r} needs rowmajor_ts=True: both replace the "
+            f"method={method!r} needs rowmajor_ts=True: all replace the "
             "(ts, slot) tie-break with the flat row index, which is only "
             "equivalent when rows are already in (ts, slot) order")
     if method != "auto":
-        path = method
+        # "megakernel" shares the partition's geometry (same histogram
+        # backbone); whether chain EVALUATION goes through the fused
+        # kernel is the drivers' megakernel_engaged() decision
+        path = "partition" if method == "megakernel" else method
     elif not rowmajor_ts:
         path = "lexsort"
     elif partition_fits(n, pad_uid + 1):
@@ -218,13 +267,17 @@ def partition_permutation(major: jnp.ndarray, rank: jnp.ndarray,
 
 def _partition_chains(major: jnp.ndarray, n_buckets: int, *,
                       use_pallas: bool = False,
-                      rank_counts=None):
+                      rank_counts=None, geometry: bool = True,
+                      block_rows: Optional[int] = None):
     """Stable counting partition of one batch: the full chain geometry
     from ONE pass over the keys (rank + histogram), no sort, no binary
     search, no flag-compare pass.
 
     Returns ``(order, major_sorted, Chains)``; ``rank_counts`` lets the
-    stream driver inject a batched kernel result.
+    stream driver inject a batched kernel result.  ``geometry=False``
+    skips the per-row seg_id/pos/seg_end scatters that only the staged
+    segscan path reads — the fused megakernel rebuilds the flags it needs
+    in VMEM, so its plan carries just order/inv/seg_start + histograms.
     """
     from repro.kernels.radix_partition.ops import radix_partition_rank
 
@@ -232,7 +285,8 @@ def _partition_chains(major: jnp.ndarray, n_buckets: int, *,
     idx = jnp.arange(n, dtype=jnp.int32)
     if rank_counts is None:
         rank, counts = radix_partition_rank(major, n_buckets,
-                                            use_pallas=use_pallas)
+                                            use_pallas=use_pallas,
+                                            block_rows=block_rows)
     else:
         rank, counts = rank_counts
     starts, inv, order = partition_permutation(major, rank, counts)
@@ -241,10 +295,13 @@ def _partition_chains(major: jnp.ndarray, n_buckets: int, *,
     # segment geometry straight from the histogram (empty buckets -> drop)
     seg_start = jnp.zeros((n,), bool).at[
         jnp.where(nz, starts, n)].set(True, mode="drop")
-    seg_end = jnp.zeros((n,), bool).at[
-        jnp.where(nz, starts + counts - 1, n)].set(True, mode="drop")
-    seg_id = jnp.cumsum(seg_start.astype(jnp.int32)) - 1
-    pos = idx - jnp.take(starts, major_s)
+    if geometry:
+        seg_end = jnp.zeros((n,), bool).at[
+            jnp.where(nz, starts + counts - 1, n)].set(True, mode="drop")
+        seg_id = jnp.cumsum(seg_start.astype(jnp.int32)) - 1
+        pos = idx - jnp.take(starts, major_s)
+    else:
+        seg_end = seg_id = pos = None
     chains = Chains(
         order=order, inv=inv, seg_start=seg_start, seg_id=seg_id, pos=pos,
         seg_end=seg_end, n_chains=jnp.sum(nz.astype(jnp.int32)),
@@ -288,7 +345,8 @@ def restructure(ops: OpBatch, pad_uid: int, *,
                 rowmajor_ts: bool = False,
                 light: bool = False,
                 method: str = "auto",
-                use_pallas: bool = False) -> Tuple[OpBatch, Chains]:
+                use_pallas: bool = False,
+                geometry: bool = True) -> Tuple[OpBatch, Chains]:
     """Group the op batch into operation chains.
 
     Invalid (padding) ops are routed to the padding chain (uid = pad_uid)
@@ -310,7 +368,9 @@ def restructure(ops: OpBatch, pad_uid: int, *,
 
     ``method``: force a backbone ("partition" / "packed" / "lexsort");
     "auto" resolves the ladder.  ``use_pallas`` lets the partition path
-    use the Pallas kernel when its bucket bound holds.
+    use the Pallas kernel when its bucket bound holds.  ``geometry=False``
+    (partition path only) builds the megakernel's light plan — see
+    ``_partition_chains``.
     """
     uid = jnp.where(ops.valid, ops.uid, pad_uid)
     n = uid.shape[0]
@@ -319,7 +379,8 @@ def restructure(ops: OpBatch, pad_uid: int, *,
 
     if path == "partition":
         order, uid_s, chains = _partition_chains(uid, pad_uid + 1,
-                                                 use_pallas=use_pallas)
+                                                 use_pallas=use_pallas,
+                                                 geometry=geometry)
     elif path == "packed":
         order, uid_s, inv = packed_stable_sort(uid, pad_uid)
         chains = _sorted_chains(uid_s, order, inv)
@@ -337,13 +398,17 @@ def restructure_stream(ops_all: OpBatch, pad_uid: int, *,
                        rowmajor_ts: bool = False,
                        light: bool = False,
                        method: str = "auto",
-                       use_pallas: bool = False):
+                       use_pallas: bool = False,
+                       geometry: bool = True,
+                       block_rows: Optional[int] = None):
     """Batched restructure over stacked ``[n_intervals, N]`` op batches.
 
     On the partition path the within-bucket ranks and histograms for ALL
     intervals come from ONE (kernel) dispatch — the fused drivers' hoisted
     one-pass plan; only the cheap geometry assembly is vmapped.  Other
-    paths vmap the per-batch restructure unchanged.
+    paths vmap the per-batch restructure unchanged.  ``geometry=False``
+    (partition path only) builds the megakernel's light plan — see
+    ``_partition_chains``.
     """
     n = ops_all.uid.shape[-1]
     path = restructure_path(n, pad_uid, rowmajor_ts=rowmajor_ts,
@@ -356,11 +421,13 @@ def restructure_stream(ops_all: OpBatch, pad_uid: int, *,
     from repro.kernels.radix_partition.ops import radix_partition_rank
     uid = jnp.where(ops_all.valid, ops_all.uid, pad_uid)   # [n_i, N]
     rank, counts = radix_partition_rank(uid, pad_uid + 1,
-                                        use_pallas=use_pallas)
+                                        use_pallas=use_pallas,
+                                        block_rows=block_rows)
 
     def assemble(o, u, r, c):
         order, uid_s, chains = _partition_chains(u, pad_uid + 1,
-                                                 rank_counts=(r, c))
+                                                 rank_counts=(r, c),
+                                                 geometry=geometry)
         return _sorted_view(o, uid_s, order, light), chains
 
     return jax.vmap(assemble)(ops_all, uid, rank, counts)

@@ -36,9 +36,9 @@ import numpy as np
 
 from .blotter import AppSpec, build_opbatch
 from .engines import (CHAIN_SCHEMES, EngineStats, evaluate,
-                      tstream_scan_coefs_stream, tstream_scan_execute,
-                      tstream_scan_plan)
-from .restructure import restructure, restructure_stream
+                      simple_affine_luts, tstream_scan_coefs_stream,
+                      tstream_scan_execute, tstream_scan_plan)
+from .restructure import megakernel_engaged, restructure, restructure_stream
 from .types import OpResults, StateStore
 
 
@@ -53,8 +53,18 @@ class EngineConfig:
     # kernel instead of the direct-addressed gather (DESIGN.md §2.5)
     use_hash_probe_route: bool = False
     # restructure backbone: "auto" resolves the partition -> packed-sort ->
-    # lexsort ladder (DESIGN.md §2.1); force a rung for parity tests/benches
+    # lexsort -> megakernel ladder (DESIGN.md §2.1/§2.8); force a rung for
+    # parity tests/benches ("megakernel" forces the fused chain-eval rung)
     restructure_method: str = "auto"
+    # force kernel block parameters in the fused drivers' dispatches,
+    # overriding the autotune cache: a tuple of (kernel, value) pairs,
+    # e.g. (("segscan", 128), ("radix_partition", 512)).  Empty () defers
+    # to kernels/autotune.  (Tuple-of-pairs, not dict: EngineConfig must
+    # stay hashable for jit closure.)
+    kernel_block_params: tuple = ()
+
+    def block_param(self, kernel: str):
+        return dict(self.kernel_block_params).get(kernel)
 
 
 class DualModeEngine:
@@ -328,7 +338,8 @@ def _fused_impl(values, events_b, ts0, *, app: AppSpec, cfg: EngineConfig,
     if cfg.scheme in CHAIN_SCHEMES:
         pres_all = restructure_stream(
             ops_all, store.pad_uid, rowmajor_ts=True,
-            method=cfg.restructure_method, use_pallas=cfg.use_pallas)
+            method=cfg.restructure_method, use_pallas=cfg.use_pallas,
+            block_rows=cfg.block_param("radix_partition"))
 
     def body(values, xs):
         ops, pres = xs
@@ -353,13 +364,22 @@ def _fused_assoc(store: StateStore, ops_all, *, app: AppSpec,
     (post-processing happens in the shared output program,
     ``_post_stream``).
     """
+    luts = simple_affine_luts(app.funs)
+    if megakernel_engaged(ops_all.uid.shape[-1], store.values.shape[0],
+                          method=cfg.restructure_method,
+                          has_max=any(store.table_is_max),
+                          funs_simple=luts is not None):
+        return _fused_assoc_mega(store, ops_all, luts=luts, cfg=cfg)
+
     pres_all = restructure_stream(
         ops_all, store.pad_uid, rowmajor_ts=True, light=True,
-        method=cfg.restructure_method, use_pallas=cfg.use_pallas)
+        method=cfg.restructure_method, use_pallas=cfg.use_pallas,
+        block_rows=cfg.block_param("radix_partition"))
     plan_all = jax.vmap(
         lambda o, p: tstream_scan_plan(store, o, app.funs,
                                        prestructured=p))(ops_all, pres_all)
-    plan_all = tstream_scan_coefs_stream(plan_all, use_pallas=cfg.use_pallas)
+    plan_all = tstream_scan_coefs_stream(plan_all, use_pallas=cfg.use_pallas,
+                                         block_rows=cfg.block_param("segscan"))
 
     def body(values, plan):
         res, new_values, stats = tstream_scan_execute(
@@ -367,4 +387,35 @@ def _fused_assoc(store: StateStore, ops_all, *, app: AppSpec,
         return new_values, (res, stats)
 
     values, (res_all, stats) = jax.lax.scan(body, store.values, plan_all)
+    return res_all, values, stats
+
+
+def _fused_assoc_mega(store: StateStore, ops_all, *, luts,
+                      cfg: EngineConfig):
+    """Megakernel rung of the associative fast path (DESIGN.md §2.8).
+
+    The hoisted plan shrinks to the partition permutation + histograms
+    (``geometry=False`` — no per-row seg_id/pos/seg_end, no materialized
+    [N, W] coefficient arrays); the scan body evaluates each interval's
+    chains through ONE fused partition→segscan→commit dispatch
+    (``kernels/megakernel``), bit-identical to the staged rungs.
+    """
+    from repro.kernels.megakernel import fused_chain_eval
+
+    a_lut, b_lut = luts
+    sops_all, ch_all = restructure_stream(
+        ops_all, store.pad_uid, rowmajor_ts=True, light=True,
+        method="partition", use_pallas=cfg.use_pallas, geometry=False,
+        block_rows=cfg.block_param("radix_partition"))
+
+    def body(values, xs):
+        sops, ch = xs
+        res, new_values, stats = fused_chain_eval(
+            values, sops, ch, store.pad_uid, a_lut=a_lut, b_lut=b_lut,
+            use_pallas=cfg.use_pallas)
+        res = {k: ch.untake(v) for k, v in res.items()}
+        return new_values, (res, stats)
+
+    values, (res_all, stats) = jax.lax.scan(body, store.values,
+                                            (sops_all, ch_all))
     return res_all, values, stats

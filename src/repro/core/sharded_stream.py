@@ -58,14 +58,15 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from .blotter import AppSpec, build_opbatch
-from .engines import (apply_funs, funs_apply_single, tstream_scan_coefs_stream,
-                      tstream_scan_execute, tstream_scan_plan)
+from .engines import (apply_funs, funs_apply_single, simple_affine_luts,
+                      tstream_scan_coefs_stream, tstream_scan_execute,
+                      tstream_scan_plan)
 from .ownership import (LAYOUTS, bucket_by_owner, build_ownership,
                         build_probe_route, chunk_shard_output,
                         exchange_capacity, make_local_store, permute_values,
                         route_gather, unchunk_output, unpermute_values,
                         unroute_gather)
-from .restructure import Chains, restructure_stream
+from .restructure import Chains, megakernel_engaged, restructure_stream
 from .types import OpBatch, StateStore
 
 log = logging.getLogger(__name__)
@@ -394,34 +395,71 @@ def _stream_body(blocks, sim_b, events_loc, *, eng: ShardedStream, dims,
             own_mask = jnp.concatenate(
                 [(jnp.arange(s_pad) % n_dev) == dev,
                  jnp.zeros((1,), bool)])
-        pres_all = restructure_stream(
-            rops, lpad, rowmajor_ts=True, light=True,
-            method=cfg.restructure_method, use_pallas=cfg.use_pallas)
-        plan_all = jax.vmap(
-            lambda o, p: tstream_scan_plan(lstore, o, app.funs,
-                                           prestructured=p))(rops, pres_all)
-        plan_all = tstream_scan_coefs_stream(plan_all,
-                                             use_pallas=cfg.use_pallas)
+        mega_luts = simple_affine_luts(app.funs)
+        if megakernel_engaged(R, lpad + 1, method=cfg.restructure_method,
+                              has_max=has_max,
+                              funs_simple=mega_luts is not None):
+            # megakernel rung: a light geometry-free partition plan, then
+            # ONE fused dispatch per interval replaces the staged
+            # plan → coefs → execute pipeline (bit-identical — see
+            # kernels/megakernel).  The ownership merge is unchanged.
+            from repro.kernels.megakernel import fused_chain_eval
+            a_lut, b_lut = mega_luts
+            sops_all, ch_all = restructure_stream(
+                rops, lpad, rowmajor_ts=True, light=True,
+                method="partition", use_pallas=cfg.use_pallas,
+                geometry=False,
+                block_rows=cfg.block_param("radix_partition"))
 
-        def sbody(vals, plan):
-            res, new_vals, _ = tstream_scan_execute(vals, plan, lpad,
-                                                    raw=True)
-            if own_mask is not None:
-                # ownership-masked SELECT (one writer per slot) — exact,
-                # unlike delta summation
-                new_vals = jax.lax.pmax(
-                    jnp.where(own_mask[:, None], new_vals, -jnp.inf),
-                    merge_axes)
-                new_vals = new_vals.at[lpad].set(0.0)
-            return new_vals, res
+            def sbody(vals, xs):
+                sops, ch = xs
+                res, new_vals, _ = fused_chain_eval(
+                    vals, sops, ch, lpad, a_lut=a_lut, b_lut=b_lut,
+                    use_pallas=cfg.use_pallas)
+                if own_mask is not None:
+                    new_vals = jax.lax.pmax(
+                        jnp.where(own_mask[:, None], new_vals, -jnp.inf),
+                        merge_axes)
+                    new_vals = new_vals.at[lpad].set(0.0)
+                return new_vals, res
 
-        vals_fin, res_sorted = jax.lax.scan(sbody, vals0, plan_all)
-        res_routed = {k: jax.vmap(Chains.untake)(plan_all.ch, v)
-                      for k, v in res_sorted.items()}
+            vals_fin, res_sorted = jax.lax.scan(sbody, vals0,
+                                                (sops_all, ch_all))
+            res_routed = {k: jax.vmap(Chains.untake)(ch_all, v)
+                          for k, v in res_sorted.items()}
+        else:
+            pres_all = restructure_stream(
+                rops, lpad, rowmajor_ts=True, light=True,
+                method=cfg.restructure_method, use_pallas=cfg.use_pallas,
+                block_rows=cfg.block_param("radix_partition"))
+            plan_all = jax.vmap(
+                lambda o, p: tstream_scan_plan(lstore, o, app.funs,
+                                               prestructured=p))(rops,
+                                                                 pres_all)
+            plan_all = tstream_scan_coefs_stream(
+                plan_all, use_pallas=cfg.use_pallas,
+                block_rows=cfg.block_param("segscan"))
+
+            def sbody(vals, plan):
+                res, new_vals, _ = tstream_scan_execute(vals, plan, lpad,
+                                                        raw=True)
+                if own_mask is not None:
+                    # ownership-masked SELECT (one writer per slot) —
+                    # exact, unlike delta summation
+                    new_vals = jax.lax.pmax(
+                        jnp.where(own_mask[:, None], new_vals, -jnp.inf),
+                        merge_axes)
+                    new_vals = new_vals.at[lpad].set(0.0)
+                return new_vals, res
+
+            vals_fin, res_sorted = jax.lax.scan(sbody, vals0, plan_all)
+            res_routed = {k: jax.vmap(Chains.untake)(plan_all.ch, v)
+                          for k, v in res_sorted.items()}
     else:
         pres_all = restructure_stream(
             rops, lpad, rowmajor_ts=True,
-            method=cfg.restructure_method, use_pallas=cfg.use_pallas)
+            method=cfg.restructure_method, use_pallas=cfg.use_pallas,
+            block_rows=cfg.block_param("radix_partition"))
         lk = partial(
             _lockstep_interval, eng=eng, R=R, N_glob=N_glob,
             pad_uid=lpad, Wq=Wp, axis=axes[0], per=per, s_pad=s_pad,

@@ -60,22 +60,23 @@ def _probe_kernel(q_ref, tlo_ref, thi_ref, out_ref, *, n_buckets: int):
 
 
 def hash_probe_pallas(keys: jnp.ndarray, table_lo: jnp.ndarray,
-                      table_hi: jnp.ndarray, *, interpret: bool = True):
-    """keys: i32[N] (N % BLOCK_Q == 0); table halves f32[n_buckets, ASSOC].
+                      table_hi: jnp.ndarray, *, interpret: bool = True,
+                      block_q: int = BLOCK_Q):
+    """keys: i32[N] (N % block_q == 0); table halves f32[n_buckets, ASSOC].
 
     Returns i32[N] slot index, -1 if absent.
     """
     n = keys.shape[0]
     n_buckets = table_lo.shape[0]
-    assert n % BLOCK_Q == 0 and table_lo.shape == (n_buckets, ASSOC)
+    assert n % block_q == 0 and table_lo.shape == (n_buckets, ASSOC)
     kernel = functools.partial(_probe_kernel, n_buckets=n_buckets)
     out = pl.pallas_call(
         kernel,
-        grid=(n // BLOCK_Q,),
-        in_specs=[pl.BlockSpec((BLOCK_Q, 1), lambda g: (g, 0)),
+        grid=(n // block_q,),
+        in_specs=[pl.BlockSpec((block_q, 1), lambda g: (g, 0)),
                   pl.BlockSpec((n_buckets, ASSOC), lambda g: (0, 0)),
                   pl.BlockSpec((n_buckets, ASSOC), lambda g: (0, 0))],
-        out_specs=pl.BlockSpec((BLOCK_Q, 1), lambda g: (g, 0)),
+        out_specs=pl.BlockSpec((block_q, 1), lambda g: (g, 0)),
         out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
         interpret=interpret,
     )(keys[:, None], table_lo, table_hi)

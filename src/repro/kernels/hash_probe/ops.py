@@ -6,18 +6,27 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .. import autotune
 from ..runtime import default_interpret
 from . import kernel as K
 
 
-@partial(jax.jit, static_argnames=("interpret",))
+@partial(jax.jit, static_argnames=("interpret", "block_q"))
 def hash_probe(keys: jnp.ndarray, table_lo: jnp.ndarray,
-               table_hi: jnp.ndarray, interpret: bool | None = None):
-    """keys i32[N] -> slot i32[N] (-1 if absent); pads N to the block size."""
+               table_hi: jnp.ndarray, interpret: bool | None = None,
+               block_q: int | None = None):
+    """keys i32[N] -> slot i32[N] (-1 if absent); pads N to the block size.
+
+    ``block_q=None`` resolves the tuned query block at trace time
+    (kernels/autotune); pass an int to force a shape.
+    """
     if interpret is None:
         interpret = default_interpret()
     n = keys.shape[0]
-    rows = -(-n // K.BLOCK_Q) * K.BLOCK_Q
+    if block_q is None:
+        block_q = autotune.block_rows("hash_probe", n, dtype="int32")
+    rows = -(-n // block_q) * block_q
     kp = jnp.pad(keys.astype(jnp.int32), (0, rows - n), constant_values=0)
-    out = K.hash_probe_pallas(kp, table_lo, table_hi, interpret=interpret)
+    out = K.hash_probe_pallas(kp, table_lo, table_hi, interpret=interpret,
+                              block_q=block_q)
     return out[:n]

@@ -1,0 +1,6 @@
+from .ops import (MEGA_MAX_CELLS, MEGA_MAX_ROWS, fused_chain_eval,
+                  mega_kernel_fits)
+from .ref import fused_chain_eval_ref
+
+__all__ = ["fused_chain_eval", "fused_chain_eval_ref", "mega_kernel_fits",
+           "MEGA_MAX_ROWS", "MEGA_MAX_CELLS"]

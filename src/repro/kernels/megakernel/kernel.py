@@ -1,0 +1,150 @@
+"""Pallas TPU megakernel: fused partition→segscan→commit chain evaluation.
+
+The staged restructure fast path round-trips its intermediates through
+HBM between dispatches: the counting partition emits rank/histograms, the
+host-side plan materializes per-op affine coefficients ``[N, W]``, the
+segscan kernel reads them back and writes the scanned ``A/B`` (and the
+execute stage re-reads those to apply ``v0`` and gather the commit rows).
+This kernel runs the values-dependent half of that pipeline — coefficient
+expansion, the segmented affine scan, state-gather, chain evaluation and
+the commit-map emission — in ONE dispatch with every intermediate
+VMEM-resident.  Nothing between the sorted operand block coming in and
+(pre, post, committed-accumulator) going out touches HBM.
+
+Exactness contract (what lets this sit on the restructure ladder at all):
+
+* grid = (1,): the whole sorted interval is one block, so the in-block
+  flag-blocked Hillis–Steele sweep is step-for-step the SAME operation
+  sequence as the XLA ``segmented_scan_affine`` — no cross-block carry
+  fold, hence bit-identical scans on ANY row count (extra d ≥ n steps
+  are no-ops: row 0 always starts a segment, so every row's flag is
+  saturated by then, and padding rows are their own dead segments).
+* state gather/scatter as one-hot f32 matmuls: products are exactly 0
+  or the operand, and the row/column sums add exactly one non-zero —
+  bit-exact for finite values (this is why the megakernel refuses
+  max-typed tables: their -inf neutrals produce 0·(-inf) = NaN).  On a
+  real MXU the dots need ``preferred_element_type=float32`` +
+  ``precision=HIGHEST`` (f32 emulation) to keep the products exact;
+  interpret mode computes them in f32 directly.
+
+Scope: simple-affine fun families only (a ∈ {0,1}, b ∈ {0, operand} —
+``engines.simple_affine_luts``), so the per-op coefficients collapse to
+two scalar columns (``a_sel``, ``b_is_operand``) and the kernel never
+loads an ``[N, W]`` coefficient array from HBM at all.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _shift_down(x: jnp.ndarray, d: int, fill) -> jnp.ndarray:
+    """x[i-d] with ``fill`` for i < d (rows axis)."""
+    pad = jnp.full((d,) + x.shape[1:], fill, x.dtype)
+    return jnp.concatenate([pad, x[:-d]], axis=0)
+
+
+def _fused_chain_kernel(f_ref, asel_ref, bis_ref, valid_ref, uid_ref,
+                        operand_ref, values_ref,
+                        pre_ref, post_ref, acc_ref, *,
+                        n_rows: int, n_slots_padded: int):
+    f = f_ref[...] > 0.0                       # [N, LANES] seg-start flags
+    valid = valid_ref[...] > 0.0               # [N, 1]
+    uid = uid_ref[...][:, 0]                   # [N] i32 (sorted)
+
+    # -- stage 1: coefficient expansion (VMEM; replaces the [N, W] af/bf
+    #    HBM arrays of the staged plan).  Invalid rows become identity.
+    a = jnp.broadcast_to(asel_ref[...], (n_rows, LANES))
+    b = jnp.where(bis_ref[...] > 0.0, operand_ref[...], 0.0)
+    a = jnp.where(valid, a, jnp.ones_like(a))
+    b = jnp.where(valid, b, jnp.zeros_like(b))
+
+    # -- stage 2: inclusive segmented affine scan — the exact operation
+    #    sequence of core.restructure.segmented_scan_affine (shift fills
+    #    flag=True / a=1 / b=0 block at the array edge).
+    fi, a_inc, b_inc = f, a, b
+    d = 1
+    while d < n_rows:
+        ap = _shift_down(a_inc, d, 1.0)
+        bp = _shift_down(b_inc, d, 0.0)
+        fp = _shift_down(fi, d, True)
+        a_inc, b_inc = (jnp.where(fi, a_inc, a_inc * ap),
+                        jnp.where(fi, b_inc, a_inc * bp + b_inc))
+        fi = fi | fp
+        d *= 2
+
+    # -- exclusive view: identity at row 0 and at segment starts.
+    A = _shift_down(a_inc, 1, 1.0)
+    B = _shift_down(b_inc, 1, 0.0)
+    A = jnp.where(f, jnp.ones_like(A), A)
+    B = jnp.where(f, jnp.zeros_like(B), B)
+    # inclusive = raw ∘ exclusive (engines._compose_inclusive)
+    Ai = a * A
+    Bi = a * B + b
+
+    # -- stage 3: state gather as a one-hot matmul (exact for finite
+    #    values; TPUs have no efficient random gather inside a kernel).
+    iota = jax.lax.broadcasted_iota(jnp.int32, (n_rows, n_slots_padded), 1)
+    oh = (iota == uid[:, None]).astype(jnp.float32)        # [N, S]
+    v0 = jnp.dot(oh, values_ref[...],
+                 preferred_element_type=jnp.float32,
+                 precision=jax.lax.Precision.HIGHEST)      # [N, LANES]
+
+    pre = A * v0 + B
+    post = Ai * v0 + Bi
+
+    # -- stage 4: commit-map emission.  The last op of each chain is the
+    #    row whose successor starts a new segment; its post value lands in
+    #    its uid's accumulator column via the transposed one-hot (padding
+    #    rows are their own segments with uid=pad and post=v0[pad]=0, so
+    #    they only add exact zeros).
+    seg_end = jnp.concatenate([f[1:], jnp.full((1, LANES), True)], axis=0)
+    contrib = jnp.where(seg_end, post, 0.0)
+    acc_ref[...] = jax.lax.dot_general(
+        oh, contrib, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+        precision=jax.lax.Precision.HIGHEST)               # [S, LANES]
+
+    # -- invalid (padding) ops record nothing (staged-path semantics:
+    #    committed values were gathered from the unmasked post above)
+    pre_ref[...] = jnp.where(valid, pre, 0.0)
+    post_ref[...] = jnp.where(valid, post, 0.0)
+
+
+def fused_chain_pallas(flags: jnp.ndarray, a_sel: jnp.ndarray,
+                       b_is: jnp.ndarray, valid: jnp.ndarray,
+                       uid: jnp.ndarray, operand: jnp.ndarray,
+                       values: jnp.ndarray, *, interpret: bool = True):
+    """One fused dispatch over a whole sorted interval.
+
+    flags/operand: f32[N, LANES]; a_sel/b_is/valid: f32[N, 1];
+    uid: i32[N, 1]; values: f32[S, LANES] with S % LANES == 0.
+    Returns (pre, post) f32[N, LANES] and acc f32[S, LANES] — the
+    committed (chain-end) value per slot, zeros for chainless slots.
+    """
+    n, lanes = operand.shape
+    s = values.shape[0]
+    assert lanes == LANES and values.shape[1] == LANES, (operand.shape,
+                                                        values.shape)
+    assert s % LANES == 0, (s,)
+    kernel = functools.partial(_fused_chain_kernel, n_rows=n,
+                               n_slots_padded=s)
+    rspec = pl.BlockSpec((n, LANES), lambda: (0, 0))
+    cspec = pl.BlockSpec((n, 1), lambda: (0, 0))
+    vspec = pl.BlockSpec((s, LANES), lambda: (0, 0))
+    pre, post, acc = pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[rspec, cspec, cspec, cspec, cspec, rspec, vspec],
+        out_specs=[rspec, rspec, vspec],
+        out_shape=[jax.ShapeDtypeStruct((n, LANES), jnp.float32),
+                   jax.ShapeDtypeStruct((n, LANES), jnp.float32),
+                   jax.ShapeDtypeStruct((s, LANES), jnp.float32)],
+        interpret=interpret,
+    )(flags, a_sel, b_is, valid, uid, operand, values)
+    return pre, post, acc

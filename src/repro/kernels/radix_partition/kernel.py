@@ -76,16 +76,17 @@ def _radix_rank_kernel(k_ref, rank_ref, cnt_ref, hist_ref, *,
 
 
 def radix_partition_pallas(keys: jnp.ndarray, n_buckets_padded: int, *,
-                           interpret: bool = True):
-    """keys: i32[BN, R] with R % BLOCK_ROWS == 0 and values in
+                           interpret: bool = True,
+                           block_rows: int = BLOCK_ROWS):
+    """keys: i32[BN, R] with R % block_rows == 0 and values in
     [0, n_buckets_padded); returns (rank i32[BN, R], counts i32[BN, K])."""
     bn, rows = keys.shape
-    assert rows % BLOCK_ROWS == 0, (keys.shape,)
+    assert rows % block_rows == 0, (keys.shape, block_rows)
     assert n_buckets_padded % LANES == 0, (n_buckets_padded,)
-    n_blocks = rows // BLOCK_ROWS
-    kernel = functools.partial(_radix_rank_kernel, block_rows=BLOCK_ROWS,
+    n_blocks = rows // block_rows
+    kernel = functools.partial(_radix_rank_kernel, block_rows=block_rows,
                                n_buckets_padded=n_buckets_padded)
-    kspec = pl.BlockSpec((BLOCK_ROWS, 1),
+    kspec = pl.BlockSpec((block_rows, 1),
                          lambda b, t, nb=n_blocks: (b * nb + t, 0))
     rank, counts = pl.pallas_call(
         kernel,

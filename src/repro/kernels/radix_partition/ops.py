@@ -11,6 +11,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .. import autotune
 from ..runtime import default_interpret
 from . import kernel as K
 from .ref import radix_partition_rank_ref
@@ -30,16 +31,20 @@ def _padded_buckets(n_buckets: int) -> int:
     return -(-(n_buckets + 1) // K.LANES) * K.LANES
 
 
-@partial(jax.jit, static_argnames=("n_buckets", "use_pallas", "interpret"))
+@partial(jax.jit, static_argnames=("n_buckets", "use_pallas", "interpret",
+                                   "block_rows"))
 def radix_partition_rank(keys: jnp.ndarray, n_buckets: int, *,
                          use_pallas: bool = False,
-                         interpret: bool | None = None):
+                         interpret: bool | None = None,
+                         block_rows: int | None = None):
     """keys: i32[N] or i32[BN, N], values in [0, n_buckets).
 
     Returns ``(rank, counts)`` with ``rank`` the stable within-bucket rank
     of each row (shape of ``keys``) and ``counts`` the per-batch histogram
     (``[n_buckets]`` / ``[BN, n_buckets]``).  ``use_pallas`` dispatches the
     kernel when its bucket bound holds, else the XLA counting ref.
+    ``block_rows=None`` resolves the tuned block at trace time
+    (kernels/autotune); pass an int to force a shape.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -48,11 +53,15 @@ def radix_partition_rank(keys: jnp.ndarray, n_buckets: int, *,
     assert k2.ndim == 2, keys.shape
     if use_pallas and kernel_fits(n_buckets, k2.shape[1]):
         bn, n = k2.shape
-        rows = -(-n // K.BLOCK_ROWS) * K.BLOCK_ROWS
+        if block_rows is None:
+            block_rows = autotune.block_rows("radix_partition", n,
+                                             dtype="int32")
+        rows = -(-n // block_rows) * block_rows
         kpad = jnp.pad(k2.astype(jnp.int32), ((0, 0), (0, rows - n)),
                        constant_values=n_buckets)
         rank, counts = K.radix_partition_pallas(
-            kpad, _padded_buckets(n_buckets), interpret=interpret)
+            kpad, _padded_buckets(n_buckets), interpret=interpret,
+            block_rows=block_rows)
         rank, counts = rank[:, :n], counts[:, :n_buckets]
     else:
         rank, counts = jax.vmap(

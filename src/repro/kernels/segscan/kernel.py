@@ -128,15 +128,16 @@ def _segscan_max_kernel(f_ref, m_ref, om_ref, cm_ref, *, block_rows: int):
 
 
 def segscan_affine_pallas(flags: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
-                          *, interpret: bool = True):
-    """Exclusive segmented affine scan.  flags/a/b: f32[N, LANES], N % BLOCK_ROWS == 0."""
+                          *, interpret: bool = True,
+                          block_rows: int = BLOCK_ROWS):
+    """Exclusive segmented affine scan.  flags/a/b: f32[N, LANES], N % block_rows == 0."""
     n = a.shape[0]
-    assert n % BLOCK_ROWS == 0 and a.shape[1] == LANES, (a.shape,)
-    spec = pl.BlockSpec((BLOCK_ROWS, LANES), lambda g: (g, 0))
-    kernel = functools.partial(_segscan_affine_kernel, block_rows=BLOCK_ROWS)
+    assert n % block_rows == 0 and a.shape[1] == LANES, (a.shape, block_rows)
+    spec = pl.BlockSpec((block_rows, LANES), lambda g: (g, 0))
+    kernel = functools.partial(_segscan_affine_kernel, block_rows=block_rows)
     return pl.pallas_call(
         kernel,
-        grid=(n // BLOCK_ROWS,),
+        grid=(n // block_rows,),
         in_specs=[spec, spec, spec],
         out_specs=[spec, spec],
         out_shape=[jax.ShapeDtypeStruct(a.shape, a.dtype),
@@ -148,15 +149,16 @@ def segscan_affine_pallas(flags: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
 
 
 def segscan_max_pallas(flags: jnp.ndarray, m: jnp.ndarray,
-                       *, interpret: bool = True):
-    """Exclusive segmented max scan.  flags/m: f32[N, LANES], N % BLOCK_ROWS == 0."""
+                       *, interpret: bool = True,
+                       block_rows: int = BLOCK_ROWS):
+    """Exclusive segmented max scan.  flags/m: f32[N, LANES], N % block_rows == 0."""
     n = m.shape[0]
-    assert n % BLOCK_ROWS == 0 and m.shape[1] == LANES, (m.shape,)
-    spec = pl.BlockSpec((BLOCK_ROWS, LANES), lambda g: (g, 0))
-    kernel = functools.partial(_segscan_max_kernel, block_rows=BLOCK_ROWS)
+    assert n % block_rows == 0 and m.shape[1] == LANES, (m.shape, block_rows)
+    spec = pl.BlockSpec((block_rows, LANES), lambda g: (g, 0))
+    kernel = functools.partial(_segscan_max_kernel, block_rows=block_rows)
     return pl.pallas_call(
         kernel,
-        grid=(n // BLOCK_ROWS,),
+        grid=(n // block_rows,),
         in_specs=[spec, spec],
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct(m.shape, m.dtype),

@@ -11,6 +11,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .. import autotune
 from ..runtime import default_interpret as _default_interpret
 from . import kernel as K
 
@@ -22,17 +23,22 @@ def _pad(x: jnp.ndarray, rows: int, lanes: int, fill) -> jnp.ndarray:
     return jnp.pad(x, ((0, rows - n), (0, lanes - w)), constant_values=fill)
 
 
-@partial(jax.jit, static_argnames=("exclusive", "interpret"))
+@partial(jax.jit, static_argnames=("exclusive", "interpret", "block_rows"))
 def segscan_affine(a: jnp.ndarray, b: jnp.ndarray, seg_start: jnp.ndarray,
-                   exclusive: bool = True, interpret: bool | None = None):
+                   exclusive: bool = True, interpret: bool | None = None,
+                   block_rows: int | None = None):
     """Exclusive segmented affine scan via the Pallas kernel.
 
     a, b: f32[N, W]; seg_start: bool[N].  Returns (A, B) f32[N, W].
+    ``block_rows=None`` resolves the tuned block at trace time
+    (kernels/autotune); pass an int to force a shape.
     """
     assert exclusive, "kernel implements the exclusive scan"
     interpret = _default_interpret() if interpret is None else interpret
     n, w = a.shape
-    rows = -(-n // K.BLOCK_ROWS) * K.BLOCK_ROWS
+    if block_rows is None:
+        block_rows = autotune.block_rows("segscan", n)
+    rows = -(-n // block_rows) * block_rows
     f = jnp.broadcast_to(seg_start.astype(jnp.float32)[:, None],
                          (n, K.LANES))
     # padding rows form their own dead segment (flag=1) so the carry of the
@@ -40,21 +46,26 @@ def segscan_affine(a: jnp.ndarray, b: jnp.ndarray, seg_start: jnp.ndarray,
     f = jnp.pad(f, ((0, rows - n), (0, 0)), constant_values=1.0)
     ap = _pad(a.astype(jnp.float32), rows, K.LANES, 1.0)
     bp = _pad(b.astype(jnp.float32), rows, K.LANES, 0.0)
-    A, B = K.segscan_affine_pallas(f, ap, bp, interpret=interpret)
+    A, B = K.segscan_affine_pallas(f, ap, bp, interpret=interpret,
+                                   block_rows=block_rows)
     return A[:n, :w], B[:n, :w]
 
 
-@partial(jax.jit, static_argnames=("exclusive", "interpret"))
+@partial(jax.jit, static_argnames=("exclusive", "interpret", "block_rows"))
 def segscan_max(m: jnp.ndarray, seg_start: jnp.ndarray,
-                exclusive: bool = True, interpret: bool | None = None):
+                exclusive: bool = True, interpret: bool | None = None,
+                block_rows: int | None = None):
     """Exclusive segmented max scan via the Pallas kernel."""
     assert exclusive, "kernel implements the exclusive scan"
     interpret = _default_interpret() if interpret is None else interpret
     n, w = m.shape
-    rows = -(-n // K.BLOCK_ROWS) * K.BLOCK_ROWS
+    if block_rows is None:
+        block_rows = autotune.block_rows("segscan", n)
+    rows = -(-n // block_rows) * block_rows
     f = jnp.broadcast_to(seg_start.astype(jnp.float32)[:, None],
                          (n, K.LANES))
     f = jnp.pad(f, ((0, rows - n), (0, 0)), constant_values=1.0)
     mp = _pad(m.astype(jnp.float32), rows, K.LANES, 0.0)
-    M = K.segscan_max_pallas(f, mp, interpret=interpret)
+    M = K.segscan_max_pallas(f, mp, interpret=interpret,
+                             block_rows=block_rows)
     return M[:n, :w]

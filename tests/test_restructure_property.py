@@ -41,3 +41,21 @@ def test_partition_kernel_property(seed, n, n_slots):
     valid = rng.uniform(size=n) > 0.15
     assert_partition_matches_lexsort(mk_batch(uid, valid), n_slots,
                                      use_pallas=True)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 300),
+       n_slots=st.integers(1, 80),
+       pad_frac=st.sampled_from([0.0, 0.15, 0.9, 1.0]),
+       theta=st.sampled_from([0.0, 1.0]))
+def test_megakernel_matches_staged_property(seed, n, n_slots, pad_frac,
+                                            theta):
+    """The fused megakernel (XLA ref + Pallas interpret) is bit-identical
+    to the staged partition pipeline across random odd shapes, skew and
+    pad fractions (the shared assertion lives in ``test_megakernel``)."""
+    from test_megakernel import assert_fused_matches_staged
+    rng = np.random.default_rng(seed)
+    w = 1.0 / np.power(np.arange(1, n_slots + 1, dtype=np.float64), theta)
+    uid = rng.choice(n_slots, size=n, p=w / w.sum())
+    valid = rng.uniform(size=n) >= pad_frac
+    assert_fused_matches_staged(uid, valid, n_slots, seed=seed % 1000)
