@@ -1,0 +1,12 @@
+"""Adaptive control plane benchmark (DESIGN.md §2.9) — thin module shim.
+
+The measurement lives in ``service_latency.run_adaptive`` (it shares the
+service A/B machinery); registering it as its own module gives it its
+own ``BENCH_adaptive.json`` trajectory file.  Rows carry ``plan``
+(adaptive vs each static plan) and ``phase`` (per storm phase, plus an
+aggregate ``"all"`` row), so adaptive/static comparisons interleave per
+phase of the workload storm.
+"""
+from __future__ import annotations
+
+from .service_latency import run_adaptive as run  # noqa: F401

@@ -24,14 +24,15 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: fig8,fig9,fig10,fig11,fig12,fig13,"
                          "fig14,roofline,fused_stream,sharded_stream,"
-                         "restructure,service")
+                         "restructure,service,adaptive")
     args, _ = ap.parse_known_args()
     quick = not args.full
 
-    from . import (fig8_throughput, fig9_breakdown, fig10_multipartition,
-                   fig11_workload, fig12_interval, fig13_latency,
-                   fig14_numa, fused_stream, restructure_bench, roofline,
-                   service_latency, sharded_stream)
+    from . import (adaptive_storm, fig8_throughput, fig9_breakdown,
+                   fig10_multipartition, fig11_workload, fig12_interval,
+                   fig13_latency, fig14_numa, fused_stream,
+                   restructure_bench, roofline, service_latency,
+                   sharded_stream)
     modules = dict(fig8=fig8_throughput, fig9=fig9_breakdown,
                    fig10=fig10_multipartition, fig11=fig11_workload,
                    fig12=fig12_interval, fig13=fig13_latency,
@@ -39,7 +40,8 @@ def main() -> None:
                    fused_stream=fused_stream,
                    sharded_stream=sharded_stream,
                    restructure=restructure_bench,
-                   service=service_latency)
+                   service=service_latency,
+                   adaptive=adaptive_storm)
     only = set(args.only.split(",")) if args.only else set(modules)
 
     os.makedirs("results/bench", exist_ok=True)
@@ -68,7 +70,8 @@ def main() -> None:
                            ("fig", "app", "scheme", "layout", "driver",
                             "arch", "shape", "width", "interval",
                             "mp_ratio", "mp_len", "read_ratio", "theta",
-                            "mesh", "n_dev", "fused")
+                            "mesh", "n_dev", "fused", "scenario", "plan",
+                            "phase")
                            if k in r)
             derived = r.get("events_per_s",
                             r.get("roofline_frac",

@@ -1,3 +1,4 @@
 from .checkpoint import (checkpoint_steps, latest_step, latest_valid_step,
-                         load_checkpoint, prune_checkpoints, reshard,
-                         save_checkpoint, verify_checkpoint)
+                         load_checkpoint, prune_checkpoints,
+                         read_manifest_meta, reshard, save_checkpoint,
+                         verify_checkpoint)

@@ -121,6 +121,18 @@ def _read_manifest(ckpt_dir: str, step: int) -> Optional[dict]:
         return None
 
 
+def read_manifest_meta(ckpt_dir: str, step: int) -> Optional[dict]:
+    """The ``extra_meta`` dict a snapshot was published with (or None for
+    a missing/torn manifest).  This is the service's replay record: for
+    adaptive runs it carries the controller decision trace + record
+    window alongside ``intervals_done`` (DESIGN.md §2.9), so ``resume``
+    can rebuild the plan without loading any leaf."""
+    manifest = _read_manifest(ckpt_dir, step)
+    if manifest is None:
+        return None
+    return dict(manifest.get("meta") or {})
+
+
 def checkpoint_steps(ckpt_dir: str) -> List[int]:
     """Published steps with a *readable* manifest, descending.
 

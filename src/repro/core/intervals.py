@@ -229,3 +229,45 @@ class ReplaySource:
             j = min(i + self.arrival_batch, self.n_events)
             yield ({k: v[i:j] for k, v in self._events.items()},
                    self._time[i:j])
+
+
+class PhasedReplaySource(ReplaySource):
+    """A deterministic multi-phase *workload storm*: the event stream is
+    the concatenation of per-phase ``gen_events`` outputs (same generator,
+    different kwargs — e.g. a key-skew flip followed by a multi-partition
+    burst), drawn from ONE seeded rng stream so the whole storm is a pure
+    function of ``(seed, phases)``.  Event times stay globally monotone
+    across phase boundaries and the arrival jitter permutation applies to
+    the concatenated stream, so everything ``ReplaySource`` guarantees
+    (bounded displacement, exact ``in_order_events``, replayability for
+    crash → restore → replay) holds for the storm too.
+
+    ``phases``: sequence of ``(n_events, gen_kwargs)``.  ``phase_bounds``
+    exposes the cumulative event-count boundaries, so callers (the storm
+    benchmark) can map a punctuation interval to its phase:
+    interval *i* covers events ``[i*interval, (i+1)*interval)``.
+    """
+
+    def __init__(self, gen_events, phases, *, seed: int = 0,
+                 arrival_batch: int = 64, jitter: int = 0):
+        phases = [(int(n), dict(kw)) for n, kw in phases]
+        assert phases and all(n > 0 for n, _ in phases), phases
+
+        def gen(rng, n_total, **_):
+            parts = [gen_events(rng, n, **kw) for n, kw in phases]
+            keys = list(parts[0])
+            assert all(list(p) == keys for p in parts), \
+                "every phase must emit the same event columns"
+            return {k: np.concatenate([np.asarray(p[k]) for p in parts])
+                    for k in keys}
+
+        super().__init__(gen, sum(n for n, _ in phases), seed=seed,
+                         arrival_batch=arrival_batch, jitter=jitter)
+        self.phases = phases
+        self.phase_bounds = np.cumsum([n for n, _ in phases])
+
+    def phase_of_interval(self, interval_idx: int, interval: int) -> int:
+        """Phase index of the interval's FIRST event (intervals straddling
+        a boundary count toward the earlier phase)."""
+        ev = interval_idx * interval
+        return int(np.searchsorted(self.phase_bounds, ev, side="right"))

@@ -124,6 +124,9 @@ class RoutePlan:
     ``dropped`` : i32 scalar, valid ops lost to bucket overflow — the
                   exchange's accuracy/traffic trade-off, surfaced to the
                   driver's stats rather than silently discarded
+    ``fill``    : i32 scalar, occupancy of the fullest real bucket
+                  (pre-clamp, so ``fill > cap`` iff something dropped) —
+                  the controller's predictive widen-before-drop signal
     """
 
     take: jnp.ndarray
@@ -131,6 +134,7 @@ class RoutePlan:
     rank: jnp.ndarray
     dst: jnp.ndarray
     dropped: jnp.ndarray
+    fill: jnp.ndarray
 
 
 def _exchange_counting_wins(n: int, n_route: int) -> bool:
@@ -177,7 +181,9 @@ def bucket_by_owner(dst: jnp.ndarray, n_route: int, cap: int,
           < jnp.minimum(counts[:n_route], cap)[:, None])
     take = jnp.where(ok, jnp.take(order, jnp.minimum(j, n - 1)), 0)
     dropped = jnp.sum(jnp.maximum(counts[:n_route] - cap, 0))
-    return RoutePlan(take=take, ok=ok, rank=rank, dst=dst, dropped=dropped)
+    fill = jnp.max(counts[:n_route])
+    return RoutePlan(take=take, ok=ok, rank=rank, dst=dst, dropped=dropped,
+                     fill=fill)
 
 
 def route_gather(plan: RoutePlan, field: jnp.ndarray, pad_value):

@@ -87,6 +87,10 @@ class DualModeEngine:
         self._fused = jax.jit(
             partial(_fused_impl, app=app, cfg=cfg, store=store),
             donate_argnums=0)
+        # plan variants (adaptive control plane, DESIGN.md §2.9): extra
+        # jitted builds of the SAME fused program with scheme/rung
+        # overrides, selectable per chunk via run_stream_chunk(variant=)
+        self._variants: Dict[Tuple[str, str], object] = {}
         # THE output program: all drivers post-process through this one
         # jitted function on identical shapes (see _post_stream)
         self._post = jax.jit(partial(_post_stream, app=app))
@@ -163,8 +167,37 @@ class DualModeEngine:
         return [jax.tree_util.tree_map(lambda x, i=i: x[i], outs)
                 for i in range(n_intervals)]
 
-    # -- chunked service API (runtime/service.py; DESIGN.md §2.6) ----------
-    def run_stream_chunk(self, values, batched, ts0: int):
+    # -- chunked service API (runtime/service.py; DESIGN.md §2.6/§2.9) -----
+    def ensure_variant(self, scheme: str | None = None,
+                       restructure_method: str | None = None):
+        """Pre-build a jitted plan variant with scheme/rung overridden.
+
+        Returns the variant key to pass to :meth:`run_stream_chunk`, or
+        ``None`` when the requested plan IS the construction plan (the
+        base ``_fused`` program).  Building is idempotent and lazy —
+        compilation itself still happens at the variant's first dispatch
+        per chunk shape.  Single-device only: the sharded driver's
+        adaptive lattice is {exchange slack, chunk size}, both handled
+        elsewhere (``ShardedStream.set_exchange_slack`` / the service's
+        chunking loop).
+        """
+        sch = scheme or self.cfg.scheme
+        rung = restructure_method or self.cfg.restructure_method
+        if (sch, rung) == (self.cfg.scheme, self.cfg.restructure_method):
+            return None
+        assert self._sharded is None, \
+            "sharded driver has no scheme/rung plan variants"
+        key = (sch, rung)
+        if key not in self._variants:
+            cfg = dataclasses.replace(self.cfg, scheme=sch,
+                                      restructure_method=rung)
+            self._variants[key] = jax.jit(
+                partial(_fused_impl, app=self.app, cfg=cfg,
+                        store=self.init_store),
+                donate_argnums=0)
+        return key
+
+    def run_stream_chunk(self, values, batched, ts0: int, variant=None):
         """One device-resident chunk of a continuous run.
 
         ``batched`` leaves are ``[K, interval, ...]`` **device** arrays and
@@ -174,18 +207,26 @@ class DualModeEngine:
         over the concatenated events (bit-identity pinned in
         tests/test_service.py).  ``ts0`` is the global timestamp base of
         the chunk's first interval (= global interval index × interval).
+        ``variant`` selects a pre-built plan variant (``ensure_variant``);
+        ``None`` runs the construction plan.
 
-        Returns ``(res_all, ebs_all, values', exchange_stats)`` as
-        *unmaterialized* device arrays — nothing blocks, so the caller can
-        stage and dispatch chunk *i+1* while chunk *i* still runs
-        (``exchange_stats`` is None off the sharded driver).  Materialize
+        Returns ``(res_all, ebs_all, values', stats)`` as *unmaterialized*
+        device arrays — nothing blocks, so the caller can stage and
+        dispatch chunk *i+1* while chunk *i* still runs.  ``stats`` is
+        ``dict(engine=EngineStats)`` ([K]-stacked scan leaves) on the
+        single-device driver and ``dict(exchange=...)`` (dropped/shipped/
+        max_fill per interval + capacity) on the sharded one.  Materialize
         per-interval outputs later via :meth:`post_outputs`.
         """
         if self._sharded is not None:
-            return self._sharded.run_chunk(values, batched, ts0)
-        res_all, ebs_all, values, _ = self._fused(values, batched,
-                                                  jnp.int32(ts0))
-        return res_all, ebs_all, values, None
+            assert variant is None, \
+                "sharded driver has no scheme/rung plan variants"
+            res_all, ebs_all, values, xst = self._sharded.run_chunk(
+                values, batched, ts0)
+            return res_all, ebs_all, values, dict(exchange=xst)
+        fn = self._fused if variant is None else self._variants[variant]
+        res_all, ebs_all, values, est = fn(values, batched, jnp.int32(ts0))
+        return res_all, ebs_all, values, dict(engine=est)
 
     def post_outputs(self, res_all, ebs_all, n_intervals: int):
         """Materialize a chunk's per-interval outputs (blocks on D2H)."""

@@ -152,6 +152,7 @@ class ShardedStream:
             self.last_stats = dict(
                 dropped=np.zeros((0,), np.int32),
                 shipped=np.zeros((0,), np.int32),
+                max_fill=np.zeros((0,), np.int32),
                 capacity=np.int32(0),
                 exchanged_rows_per_device=np.int32(0))
             return [], values
@@ -257,12 +258,14 @@ def _sharded_fused_impl(values, events_b, ts0, *, eng: ShardedStream):
     fn = shard_map(
         body, mesh=mesh,
         in_specs=(state_spec, state_spec, P(None, axes)),
-        out_specs=(P(None, axes), P(None, axes), P(axes), P(axes), P(axes)),
+        out_specs=(P(None, axes), P(None, axes), P(axes), P(axes), P(axes),
+                   P(axes)),
         check_rep=False)
-    res_all, ebs_all, blocks_out, dropped, shipped = fn(blocks, sim_b,
-                                                        events_b)
+    res_all, ebs_all, blocks_out, dropped, shipped, fills = fn(blocks, sim_b,
+                                                               events_b)
     dropped = jnp.sum(dropped, axis=0)                    # [n_intervals]
     shipped = jnp.sum(shipped, axis=0)
+    fills = jnp.max(fills, axis=0)                        # [n_intervals]
 
     # ---- reassemble final values in the original slot order -------------
     if layout == "shared_nothing":
@@ -276,7 +279,7 @@ def _sharded_fused_impl(values, events_b, ts0, *, eng: ShardedStream):
     vperm_out = vperm_out[:, :W]
     values_out = unpermute_values(
         own, jnp.concatenate([vperm_out, jnp.zeros((1, W), vperm_out.dtype)]))
-    stats = dict(dropped=dropped, shipped=shipped,
+    stats = dict(dropped=dropped, shipped=shipped, max_fill=fills,
                  capacity=jnp.int32(cap),
                  exchanged_rows_per_device=jnp.int32(n_dev * cap))
     return res_all, ebs_all, values_out, stats
@@ -498,10 +501,11 @@ def _stream_body(blocks, sim_b, events_loc, *, eng: ShardedStream, dims,
             plans, v)
         for k, v in back.items()}
 
-    # per-device exchange stats; summed outside the shard_map ([1, n_i]
+    # per-device exchange stats; reduced outside the shard_map ([1, n_i]
     # rows concatenate to [n_dev, n_i] under the fully-specified spec)
     dropped = plans.dropped[None]
     shipped = jnp.sum(plans.ok.astype(jnp.int32), axis=(1, 2))[None]
+    fills = plans.fill[None]
 
     # Every out_spec must mention every mesh axis: an under-specified
     # output (value replicated across an unmentioned axis) is treated as
@@ -516,7 +520,7 @@ def _stream_body(blocks, sim_b, events_loc, *, eng: ShardedStream, dims,
     # res/ebs leave the shard_map event-sharded; post-processing runs in
     # the enclosing jit so its reductions compile in the same (fusion)
     # context as the single-device driver and stay bit-identical to it
-    return res_loc, ebs_all, vals_fin, dropped, shipped
+    return res_loc, ebs_all, vals_fin, dropped, shipped, fills
 
 
 # ---------------------------------------------------------------------------

@@ -17,6 +17,11 @@ hung executor, a snapshot torn mid-write.  Sites:
 ``snapshot.publish``   after a snapshot's atomic publish: corrupt it on
                        disk (torn manifest, flipped or truncated leaf,
                        crashed-writer debris directory)
+``controller.decide``  on the main thread right after the adaptive
+                       controller appends a decision to its trace and
+                       BEFORE the decided chunk is submitted — the
+                       decision exists but no snapshot has recorded it
+                       yet (DESIGN.md §2.9 replay contract)
 =====================  ====================================================
 
 A ``FaultSchedule`` is a **pure function of its seed**
@@ -40,6 +45,7 @@ SOURCE_PULL = "source.pull"
 EXECUTOR_CRASH = "executor.crash"
 EXECUTOR_HANG = "executor.hang"
 SNAPSHOT_PUBLISH = "snapshot.publish"
+CONTROLLER_DECIDE = "controller.decide"
 
 #: every site -> the fault kinds that may act there
 SITE_KINDS: Dict[str, tuple] = {
@@ -48,6 +54,7 @@ SITE_KINDS: Dict[str, tuple] = {
     EXECUTOR_HANG: ("hang",),
     SNAPSHOT_PUBLISH: ("torn_manifest", "corrupt_leaf", "truncate_leaf",
                        "debris"),
+    CONTROLLER_DECIDE: ("crash",),
 }
 SITES = tuple(SITE_KINDS)
 
@@ -86,26 +93,30 @@ class Fault:
 
 
 def random_schedule(seed: int, *, n_pulls: int, n_chunks: int,
-                    n_snapshots: int, max_faults: int = 3,
-                    hang_s: float = 8.0, stall_s: float = 0.1) -> List[Fault]:
+                    n_snapshots: int, n_decisions: int = 0,
+                    max_faults: int = 3, hang_s: float = 8.0,
+                    stall_s: float = 0.1) -> List[Fault]:
     """Deterministic schedule: a pure function of ``seed`` (and the site
     ranges).  At most one hang per schedule (a hang costs one watchdog
     timeout of wall clock); ``hang_s`` should exceed the watchdog timeout
-    so an injected hang is always *detected*, never slept through."""
+    so an injected hang is always *detected*, never slept through.
+    ``n_decisions`` opens the ``controller.decide`` site (adaptive runs
+    only); the default 0 keeps it closed, so pre-existing seeds yield
+    byte-identical schedules."""
     rng = np.random.default_rng(np.random.SeedSequence([0xFA017, int(seed)]))
     n_faults = int(rng.integers(1, max_faults + 1))
+    ranges = dict(zip(SITES, (n_pulls, n_chunks, n_chunks, n_snapshots,
+                              n_decisions)))
     sites, weights = [], []
     for site, w in ((SOURCE_PULL, 0.35), (EXECUTOR_CRASH, 0.25),
-                    (EXECUTOR_HANG, 0.15), (SNAPSHOT_PUBLISH, 0.25)):
-        n_range = dict(zip(SITES, (n_pulls, n_chunks, n_chunks,
-                                   n_snapshots)))[site]
-        if n_range > 0:
+                    (EXECUTOR_HANG, 0.15), (SNAPSHOT_PUBLISH, 0.25),
+                    (CONTROLLER_DECIDE, 0.2)):
+        if ranges[site] > 0:
             sites.append(site)
             weights.append(w)
     if not sites:
         return []
     weights = np.asarray(weights) / np.sum(weights)
-    ranges = dict(zip(SITES, (n_pulls, n_chunks, n_chunks, n_snapshots)))
     out: List[Fault] = []
     used = set()
     hung = False
@@ -184,6 +195,17 @@ class FaultPlane:
         f = self._visit(SNAPSHOT_PUBLISH)
         if f is not None:
             corrupt_snapshot(step_dir, f.kind)
+
+    def on_controller_decide(self) -> None:
+        """After the controller appended >= 1 decision to its trace, on
+        the main thread, BEFORE the decided chunk is submitted.  The
+        visit counter indexes decision *boundaries*, so ``at=k`` crashes
+        on the k-th boundary that actually switched a knob — between the
+        decision and any snapshot that would record it."""
+        f = self._visit(CONTROLLER_DECIDE)
+        if f is not None:
+            raise InjectedCrashError(
+                f"injected controller crash at decision boundary {f.at}")
 
 
 # ---------------------------------------------------------------------------

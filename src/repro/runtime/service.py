@@ -45,30 +45,51 @@ Hardened failure path (DESIGN.md §2.7):
 * **Executor watchdog**: with ``watchdog_factor`` set, a monitor thread
   declares the executor hung when no progress lands within
   ``watchdog_factor ×`` the median recent chunk latency (never below
-  ``watchdog_min_s``; ``watchdog_grace_s`` covers the first, possibly
-  compiling, chunk).  On fire it aborts the executor, drains every
+  ``watchdog_min_s``; ``watchdog_grace_s`` covers every possibly
+  compiling chunk — the first, and the first at any new
+  (plan variant, slack, chunk-size) shape).  On fire it aborts the
+  executor, drains every
   committable in-flight chunk, writes an *emergency* punctuation-aligned
   snapshot when the carry is safe, and surfaces a structured
   ``ExecutorHungError`` with the merged stats intact.
-* **Exchange-overflow degradation**: with ``escalate_overflow`` set, a
-  sharded chunk that dropped ops schedules an automatic (logged)
-  ``exchange_slack`` escalation applied at the next punctuation boundary
-  instead of dropping silently forever.
 * **Fault injection**: ``run(..., faults=FaultPlane(...))`` consults the
   deterministic fault plane (``runtime/faults.py``) at each named site.
 
+Adaptive control plane (DESIGN.md §2.9, ``runtime/controller.py``):
+
+* With ``ServiceConfig.controller`` set, a deterministic feedback
+  controller runs on the main thread at every chunk boundary: it reads
+  the per-chunk record window (see below), moves the live plan inside a
+  small legal lattice (scheme degradation, exchange slack, chunk size K,
+  restructure rung), and the chunk is submitted *carrying* its plan — the
+  executor rebinds the pre-jitted variant / slack at the dispatch that
+  first observes a new plan.  Every switch appends to a monotone decision
+  trace; punctuation-aligned snapshots publish the trace (+ the record
+  window tail) in their manifest and ``resume`` folds it back, so
+  crash → restore → replay of an adaptive run is bitwise identical to the
+  uninterrupted adaptive run.
+* ``escalate_overflow`` is now sugar for an implicit slack-only
+  controller (PR 5's one-way escalation hack, subsumed): a sharded chunk
+  that dropped ops triggers a logged ``exchange_slack`` widening at a
+  later boundary, up to ``escalate_overflow`` times — and because the
+  escalation is a traced decision, it composes with snapshots instead of
+  being statically forbidden.
+* **Per-chunk time series**: the service keeps a ring buffer of the last
+  ``chunk_record_ring`` chunk records (latency, failed ops, chain stats,
+  exchange drop/fill, queue fill) — the controller's observation window,
+  exposed as ``stats["chunks"]``.
+
 ``StreamService.stats`` is the one merged accounting record: watermark
 drops, admission drops, sharded exchange overflow, the assembler ledger,
-source retry/backfill counters, fired faults and any structured error
-land in a single dict; each category is logged at most once per run.
+source retry/backfill counters, fired faults, the chunk-record ring, the
+controller trace and any structured error land in a single dict; each
+category is logged at most once per run.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-import json
 import logging
-import os
 import queue
 import threading
 import time
@@ -79,9 +100,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt import (checkpoint_steps, load_checkpoint, prune_checkpoints,
-                        save_checkpoint, verify_checkpoint)
+                        read_manifest_meta, save_checkpoint,
+                        verify_checkpoint)
 from repro.core.intervals import IntervalAssembler, WatermarkPolicy
 
+from .controller import ControllerConfig, Plan, PlanController, replay_plan
 from .faults import FaultPlane, TransientSourceError
 from .straggler import StragglerPolicy
 
@@ -139,6 +162,9 @@ class ServiceConfig:
     watchdog_grace_s: float = 120.0  # before the first commit (covers jit)
     escalate_overflow: int = 0      # max automatic slack escalations; 0 = off
     escalate_factor: float = 2.0
+    # -- adaptive control plane (DESIGN.md §2.9) -----------------------
+    controller: Optional[ControllerConfig] = None
+    chunk_record_ring: int = 32     # per-chunk time series depth
 
     def __post_init__(self):
         assert self.punct_interval > 0
@@ -154,12 +180,17 @@ class ServiceConfig:
         assert self.escalate_overflow >= 0
         if self.escalate_overflow:
             assert self.escalate_factor > 1.0
-            # a mid-run capacity change alters which ops drop; replay does
-            # not reproduce the escalation history, so degraded service and
-            # exact recovery are mutually exclusive modes
-            assert not self.snapshot_every, \
-                ("automatic slack escalation is not replayable: disable "
-                 "snapshots or escalation")
+            # NOTE: escalation + snapshots used to be statically excluded
+            # (a mid-run capacity change was not replayable).  Escalations
+            # are now controller decisions recorded in the snapshot's
+            # decision trace and folded back by ``resume``, so the modes
+            # compose (DESIGN.md §2.9).
+        assert self.chunk_record_ring >= 1
+        if self.controller is not None:
+            c = self.controller
+            assert c.window >= 1 and 1 <= c.sustain <= c.window, \
+                "controller needs 1 <= sustain <= window"
+            assert c.cooldown >= 1, "controller cooldown must be >= 1"
         if self.snapshot_every:
             assert self.snapshot_every % self.chunk_intervals == 0, \
                 ("snapshots are taken at chunk boundaries: snapshot_every "
@@ -182,6 +213,11 @@ class ServiceRun:
     commits: List[Dict] = dataclasses.field(default_factory=list)
     latencies: List[np.ndarray] = dataclasses.field(default_factory=list)
     snapshots: List[int] = dataclasses.field(default_factory=list)
+    # adaptive control plane: live alias of the controller's decision
+    # trace (monotone in g; includes any restored prefix) and the final
+    # chunk-record ring (per-chunk time series, newest last)
+    decisions: List[Dict] = dataclasses.field(default_factory=list)
+    chunk_records: List[Dict] = dataclasses.field(default_factory=list)
     admission_dropped: int = 0
     replayed_intervals: int = 0
     exchange_dropped: int = 0
@@ -229,7 +265,8 @@ class StreamService:
     def run(self, source, values=None, *, skip_intervals: int = 0,
             max_intervals: Optional[int] = None,
             crash_after_interval: Optional[int] = None,
-            faults: Optional[FaultPlane] = None) -> ServiceRun:
+            faults: Optional[FaultPlane] = None,
+            controller_state: Optional[Dict] = None) -> ServiceRun:
         """Drive the service until the source drains (or ``max_intervals``).
 
         ``skip_intervals`` is the recovery path: the first N re-assembled
@@ -240,7 +277,12 @@ class StreamService:
         ``crash_after_interval`` injects a failure once the interval with
         that global index has committed (tests/CI restart drill);
         ``faults`` is the general, scheduled fault plane
-        (``runtime/faults.py``).
+        (``runtime/faults.py``).  ``controller_state`` is the adaptive
+        recovery path (normally supplied by :meth:`resume` from the
+        snapshot manifest): the decision trace is folded back into the
+        plan and the stored record window seeds the controller's
+        observations, so post-restore decisions recompute exactly as the
+        uninterrupted run made them.
         """
         cfg, eng = self.cfg, self.engine
         if skip_intervals and cfg.admission != "block":
@@ -261,8 +303,32 @@ class StreamService:
         g_next = int(skip_intervals)    # global index of next interval
         executed = 0                    # intervals submitted this run
         srcst = dict(pulls=0, retries=0, deadline_misses=0, backoff_s=0.0)
-        esc = dict(pending=False, done=0)
         vals_ok = dict(safe=True)       # carry readable (not mid-donation)
+
+        # -- adaptive control plane (DESIGN.md §2.9) -----------------------
+        ctl = self._make_controller(controller_state)
+        if ctl is not None:
+            rec.decisions = ctl.trace       # live alias (monotone trace)
+        # per-chunk record ring: the controller's observation window and
+        # the stats["chunks"] time series.  Records are appended by the
+        # commit path (executor thread / post-hang drain) and read by the
+        # main thread's decision step under ``rec_cv``.
+        ring = cfg.chunk_record_ring
+        if ctl is not None:
+            ring = max(ring, ctl.cfg.window + 4)
+        hist: collections.deque = collections.deque(maxlen=ring)
+        rec_cv = threading.Condition()
+        chunks_done0 = int((controller_state or {}).get("chunks_done", 0))
+        # n: committed-chunk count (== next record's global index);
+        # last_i: newest committed record; j: chunks submitted this run
+        chn = dict(n=chunks_done0, last_i=chunks_done0 - 1, j=0)
+        for r in (controller_state or {}).get("records", ()):
+            hist.append(dict(r))
+        # the plan the engine is actually bound to (slack applied at
+        # restore by _make_controller; scheme/rung rebind lazily at the
+        # first dispatch that observes a different plan)
+        applied = dict(plan=None if ctl is None else dataclasses.replace(
+            ctl.init_plan, slack=ctl.plan.slack))
         # watchdog progress record: ``busy`` is True only while the
         # executor is actively processing (dispatch/commit/drain), ``t``
         # is bumped at every step forward, ``lat`` holds recent
@@ -331,7 +397,8 @@ class StreamService:
             return True
 
         def commit_oldest(check_crash: bool = True):
-            g0, kk, res, ebs, infos, xst = in_flight.popleft()
+            (g0, kk, res, ebs, infos, xst, item_plan, qfill,
+             t_disp) = in_flight.popleft()
             outs = eng.post_outputs(res, ebs, kk)
             t_commit = time.perf_counter()
             rec.t_last_commit = t_commit
@@ -340,14 +407,41 @@ class StreamService:
                 progress["lat"].append(now - progress["last_commit"])
             progress["last_commit"] = now
             progress["t"] = now
-            if xst is not None:
-                st = jax.device_get(xst)
+            # -- per-chunk record (the controller's observation unit) ----
+            entry = dict(
+                i=chn["n"], g0=g0, k=kk, events=kk * interval,
+                lat_s=float(now - t_disp), qfill=int(qfill),
+                scheme=(item_plan.scheme if item_plan is not None
+                        else eng.cfg.scheme),
+                fail=0, ops=0, max_chain=0, n_chains=0, rounds=0,
+                x_drop=0, x_ship=0, x_fill=0, x_cap=0)
+            suc = np.asarray(jax.device_get(res["success"]))
+            entry["ops"] = int(suc.size)
+            entry["fail"] = int(suc.size - np.sum(suc))
+            st_d = xst or {}
+            est = st_d.get("engine")
+            if est is not None:
+                es = jax.device_get(est)
+                entry["max_chain"] = int(np.max(es.max_chain))
+                entry["n_chains"] = int(np.min(es.n_chains))
+                entry["rounds"] = int(np.max(es.rounds))
+            xs = st_d.get("exchange")
+            if xs is not None:
+                st = jax.device_get(xs)
                 dropped_now = int(np.sum(st["dropped"]))
                 rec.exchange_dropped += dropped_now
                 rec.exchange_shipped += int(np.sum(st["shipped"]))
                 rec.exchange_capacity = int(st["capacity"])
-                if dropped_now and esc["done"] < cfg.escalate_overflow:
-                    esc["pending"] = True   # applied at the next dispatch
+                entry["x_drop"] = dropped_now
+                entry["x_ship"] = int(np.sum(st["shipped"]))
+                entry["x_fill"] = (int(np.max(st["max_fill"]))
+                                   if np.size(st["max_fill"]) else 0)
+                entry["x_cap"] = int(st["capacity"])
+            with rec_cv:
+                hist.append(entry)
+                chn["last_i"] = entry["i"]
+                chn["n"] += 1
+                rec_cv.notify_all()
             for i in range(kk):
                 info = infos[i]
                 rec.outputs.append(outs[i])
@@ -362,40 +456,80 @@ class StreamService:
 
         def take_snapshot(step: int, emergency: bool = False):
             host_vals = np.asarray(jax.device_get(vals))
+            extra = dict(intervals_done=step, punct_interval=interval,
+                         emergency=emergency)
+            if ctl is not None:
+                # decisions AT the boundary (g == step) race with this
+                # write on the main thread, so the manifest records the
+                # strict prefix g < step; the first post-restore decision
+                # recomputes from the stored record tail — same window,
+                # same decision (DESIGN.md §2.9 replay contract)
+                trace = [dict(d) for d in list(ctl.trace)
+                         if d["g"] < step]
+                extra["controller"] = dict(
+                    init_plan=ctl.init_plan.as_dict(),
+                    plan=replay_plan(ctl.init_plan, trace).as_dict(),
+                    trace=trace,
+                    records=[dict(r) for r in
+                             list(hist)[-(ctl.cfg.window + 1):]],
+                    chunks_done=chn["n"])
             path = save_checkpoint(
                 cfg.ckpt_dir, step, dict(values=host_vals),
-                extra_meta=dict(intervals_done=step,
-                                punct_interval=interval,
-                                emergency=emergency))
+                extra_meta=extra)
             if faults is not None and not emergency:
                 faults.on_snapshot_publish(path)
             if cfg.keep_last:
                 prune_checkpoints(cfg.ckpt_dir, cfg.keep_last)
             rec.snapshots.append(step)
 
-        def dispatch(batched, kk: int, infos):
+        seen_shapes = set()     # (variant-key, chunk size) already compiled
+
+        def dispatch(batched, kk: int, infos, plan, qfill):
             nonlocal vals, g_next
             if state["err"] is not None:
                 raise _Aborted()
-            if esc["pending"]:
-                # graceful degradation: widen the exchange at a punctuation
-                # boundary instead of dropping silently forever (recompiles
-                # the sharded program; shipped results are unaffected)
-                new_slack = eng._sharded.exchange_slack * cfg.escalate_factor
-                eng._sharded.set_exchange_slack(new_slack)
-                esc["done"] += 1
-                esc["pending"] = False
-                log.warning(
-                    "exchange overflow: escalating slack to %.2f at "
-                    "punctuation boundary %d (escalation %d/%d)",
-                    new_slack, g_next, esc["done"], cfg.escalate_overflow)
+            variant = None
+            if plan is not None:
+                prev = applied["plan"]
+                if eng._sharded is not None and plan.slack != prev.slack:
+                    # graceful degradation, now a replayed decision: widen
+                    # the exchange at the boundary the trace recorded
+                    # (recompiles the sharded program; shipped results
+                    # are unaffected)
+                    eng._sharded.set_exchange_slack(plan.slack)
+                    log.warning(
+                        "controller: exchange slack %.2f -> %.2f at "
+                        "punctuation boundary %d",
+                        prev.slack, plan.slack, g_next)
+                if eng._sharded is None:
+                    variant = eng.ensure_variant(
+                        scheme=plan.scheme, restructure_method=plan.rung)
+                    if (plan.scheme, plan.rung) != (prev.scheme, prev.rung):
+                        log.warning(
+                            "controller: plan variant %s/%s -> %s/%s at "
+                            "punctuation boundary %d",
+                            prev.scheme, prev.rung, plan.scheme, plan.rung,
+                            g_next)
+                applied["plan"] = plan
+            shape = (variant,
+                     None if plan is None else plan.slack, kk)
+            if shape not in seen_shapes:
+                # first dispatch of this (variant, slack, K) compiles a
+                # new program: drop the warm-chunk latency window so the
+                # watchdog judges it against ``watchdog_grace_s``, not
+                # the warm median — same reason grace covers chunk 0
+                seen_shapes.add(shape)
+                progress["lat"].clear()
             vals_ok["safe"] = False     # the carry is being donated
+            t_disp = time.monotonic()
             res, ebs, new_vals, xst = eng.run_stream_chunk(
-                vals, batched, ts_base_for(g_next, interval))
+                vals, batched, ts_base_for(g_next, interval),
+                variant=variant)
             vals = new_vals
             vals_ok["safe"] = True
             progress["t"] = time.monotonic()
-            in_flight.append((g_next, kk, res, ebs, infos, xst))
+            in_flight.append((g_next, kk, res, ebs, infos, xst, plan,
+                              qfill, t_disp))
             g_next += kk
             if faults is not None:
                 faults.on_executor_chunk()
@@ -487,22 +621,41 @@ class StreamService:
                                          name="stream-service-watchdog")
             wd_thread.start()
 
-        def submit(kk: int):
+        def submit(kk: int, plan):
             nonlocal executed
+            qfill = len(ready)      # deterministic backlog signal
             chunk = [ready.popleft() for _ in range(kk)]
             # count at pop time: a chunk stranded by a crash (in work_q,
             # in_flight, or aborted here) is executed-but-uncommitted and
             # must land in the stats as unprocessed, not vanish
             executed += kk
+            chn["j"] += 1
             batched = {k: jnp.asarray(np.stack([c[0][k] for c in chunk]))
                        for k in chunk[0][0]}
-            item = (batched, kk, [c[1] for c in chunk])
+            item = (batched, kk, [c[1] for c in chunk], plan, qfill)
             while state["err"] is None:
                 try:
                     work_q.put(item, timeout=0.05)
                     return
                 except queue.Full:
                     continue
+
+        def wait_records(need_i: int) -> bool:
+            """Block until the record of global chunk ``need_i`` exists.
+
+            The decision for the j-th submitted chunk reads records of
+            chunks committed strictly before submission j-1 — the newest
+            record whose presence does not depend on the commit/decide
+            race, so the window is identical on replay.  No deadlock: the
+            needed commit happens inside the executor's dispatch of the
+            previous chunk, which never waits on the main thread.
+            """
+            if chn["last_i"] >= need_i:
+                return True
+            with rec_cv:
+                while chn["last_i"] < need_i and state["err"] is None:
+                    rec_cv.wait(0.05)
+            return state["err"] is None and chn["last_i"] >= need_i
 
         try:
             while state["err"] is None:
@@ -513,15 +666,37 @@ class StreamService:
                 # only while the next chunk is still short.
                 if cfg.admission == "drop" and not state["exhausted"]:
                     pull_one()
+                if ctl is not None:
+                    K = ctl.plan.chunk
                 while not state["exhausted"] and len(ready) < K:
                     if not pull_one():
                         break
                 room = (K if max_intervals is None
                         else max(0, int(max_intervals) - executed))
+                if min(K, len(ready), room) == 0:
+                    break
+                if ctl is not None:
+                    # decide BEFORE building the submission, at the
+                    # boundary of the chunk about to submit
+                    gj = chunks_done0 + chn["j"]
+                    if not wait_records(gj - 2):
+                        break       # run already declared failed
+                    window = [r for r in list(hist) if r["i"] <= gj - 2]
+                    decisions = ctl.step(int(skip_intervals) + executed,
+                                         window)
+                    if decisions and faults is not None:
+                        faults.on_controller_decide()
+                    if ctl.plan.chunk != K:
+                        K = ctl.plan.chunk
+                        while not state["exhausted"] and len(ready) < K:
+                            if not pull_one():
+                                break
+                        room = (K if max_intervals is None
+                                else max(0, int(max_intervals) - executed))
                 kk = min(K, len(ready), room)
                 if kk == 0:
                     break
-                submit(kk)
+                submit(kk, ctl.plan if ctl is not None else None)
         except BaseException as e:
             # a fatal source error (retries exhausted) lands here: fold it
             # into the structured crash path so stats stay intact
@@ -567,13 +742,82 @@ class StreamService:
         if err is not None:
             self._finish(rec, asm, ready, crashed=True, stranded=stranded,
                          source=srcst, error=err, plane=faults,
-                         escalations=esc["done"], hung_thread=hung_thread)
+                         chunks=list(hist), controller=ctl,
+                         hung_thread=hung_thread)
             raise err
 
         rec.final_values = np.asarray(jax.device_get(vals))
         self._finish(rec, asm, ready, crashed=False, stranded=stranded,
-                     source=srcst, plane=faults, escalations=esc["done"])
+                     source=srcst, plane=faults, chunks=list(hist),
+                     controller=ctl)
         return rec
+
+    def _make_controller(self, controller_state: Optional[Dict]
+                         ) -> Optional[PlanController]:
+        """Build the run's controller: the configured one, or the implicit
+        slack-only controller that subsumes ``escalate_overflow``, or
+        None.  Restoring from ``controller_state`` folds the snapshot's
+        decision trace back into the plan and re-applies its slack;
+        single-device scheme/rung variants pre-build here so a mid-storm
+        switch costs a rebind, not a surprise trace."""
+        cfg, eng = self.cfg, self.engine
+        ctl_cfg = cfg.controller
+        if (ctl_cfg is None and cfg.escalate_overflow
+                and eng._sharded is not None):
+            # PR 5's escalate_overflow contract as a one-knob controller:
+            # widen on observed drops only, one boundary of cool-down,
+            # bounded by the configured escalation budget
+            ctl_cfg = ControllerConfig(
+                window=1, sustain=1, cooldown=cfg.chunk_intervals,
+                slack_widen=True, slack_factor=cfg.escalate_factor,
+                max_escalations=cfg.escalate_overflow, fill_widen=0.0,
+                degrade_scheme="", chunk_ladder=(), rung_ladder=())
+        elif ctl_cfg is not None and cfg.escalate_overflow:
+            ctl_cfg = dataclasses.replace(
+                ctl_cfg, max_escalations=cfg.escalate_overflow,
+                slack_factor=cfg.escalate_factor)
+        if ctl_cfg is None:
+            assert not controller_state, \
+                ("snapshot records an adaptive run: configure "
+                 "ServiceConfig.controller (or escalate_overflow) to "
+                 "resume it")
+            return None
+        if cfg.snapshot_every and ctl_cfg.allow_timing:
+            # wall latencies are not replayable signals: a snapshotted
+            # run must decide from the deterministic tier only
+            ctl_cfg = dataclasses.replace(ctl_cfg, allow_timing=False)
+        sharded = eng._sharded is not None
+        init_plan = Plan(
+            scheme=eng.cfg.scheme, rung=eng.cfg.restructure_method,
+            slack=(eng._sharded.exchange_slack if sharded else 0.0),
+            chunk=cfg.chunk_intervals)
+        if controller_state and controller_state.get("init_plan"):
+            stored = Plan.from_dict(controller_state["init_plan"])
+            # scheme/rung/chunk come from the engine/service config and
+            # must match (config mismatch is a caller error); slack may
+            # differ when the same engine object already escalated —
+            # the stored value is the original run's ground truth
+            assert (stored.scheme, stored.rung, stored.chunk) == \
+                (init_plan.scheme, init_plan.rung, init_plan.chunk), \
+                ("snapshot's adaptive run started from plan "
+                 f"{stored.as_dict()}, this service is configured for "
+                 f"{init_plan.as_dict()}")
+            init_plan = stored
+        ctl = PlanController(ctl_cfg, init_plan, sharded=sharded,
+                             snap_align=cfg.snapshot_every,
+                             queue_cap=cfg.queue_intervals)
+        if controller_state:
+            ctl.restore(controller_state.get("trace", ()),
+                        plan_check=controller_state.get("plan"))
+        if sharded:
+            if ctl.plan.slack != eng._sharded.exchange_slack:
+                eng._sharded.set_exchange_slack(ctl.plan.slack)
+        else:
+            for sch in {ctl_cfg.degrade_scheme} - {""}:
+                eng.ensure_variant(scheme=sch)
+            for rung in ctl_cfg.rung_ladder:
+                eng.ensure_variant(restructure_method=rung)
+        return ctl
 
     def resume(self, source, **run_kwargs) -> ServiceRun:
         """Restore the newest *valid* punctuation-aligned snapshot, replay.
@@ -599,9 +843,8 @@ class StreamService:
                 restored = load_checkpoint(
                     cfg.ckpt_dir, step,
                     dict(values=self.engine.init_store.values))
-                with open(os.path.join(cfg.ckpt_dir, f"step_{step:08d}",
-                                       "manifest.json")) as f:
-                    meta = json.load(f)["meta"]
+                meta = read_manifest_meta(cfg.ckpt_dir, step)
+                assert meta is not None   # verified above
             except Exception as e:
                 log.warning("snapshot step %d failed to load (%s: %s); "
                             "falling back to an older one",
@@ -613,6 +856,7 @@ class StreamService:
                 "snapshot was taken at a different punctuation interval"
             return self.run(source, values=restored["values"],
                             skip_intervals=int(meta["intervals_done"]),
+                            controller_state=meta.get("controller"),
                             **run_kwargs)
         raise FileNotFoundError(
             f"no valid snapshot under {cfg.ckpt_dir}"
@@ -626,7 +870,8 @@ class StreamService:
     def _finish(self, rec: ServiceRun, asm: IntervalAssembler, ready,
                 crashed: bool, stranded: int = 0,
                 source: Optional[Dict] = None, error=None, plane=None,
-                escalations: int = 0, hung_thread: bool = False):
+                chunks: Optional[List[Dict]] = None, controller=None,
+                hung_thread: bool = False):
         interval = self.cfg.punct_interval
         unprocessed = (len(ready) + stranded) * interval + asm.pending
         srcstats = dict(source or {})
@@ -651,6 +896,17 @@ class StreamService:
             assembly=asm.ledger,
             source=srcstats,
         )
+        # per-chunk time series (ring-bounded, newest last): the
+        # controller's observation window, published for benchmarks and
+        # post-mortems alike
+        rec.chunk_records = [dict(r) for r in (chunks or [])]
+        rec.stats["chunks"] = rec.chunk_records
+        if controller is not None:
+            rec.stats["controller"] = dict(
+                init_plan=controller.init_plan.as_dict(),
+                plan=controller.plan.as_dict(),
+                decisions=[dict(d) for d in controller.trace],
+                escalations=controller.esc_done)
         if error is not None:
             rec.stats["error"] = dict(
                 type=type(error).__name__, msg=str(error),
@@ -662,7 +918,8 @@ class StreamService:
                 dropped=rec.exchange_dropped,
                 shipped=rec.exchange_shipped,
                 capacity=rec.exchange_capacity,
-                escalations=escalations,
+                escalations=(controller.esc_done
+                             if controller is not None else 0),
                 slack=self.engine._sharded.exchange_slack)
         if not crashed:
             self._log_once(rec.stats)

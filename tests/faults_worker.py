@@ -8,7 +8,11 @@ verdicts for tests/test_faults.py::test_faults_sharded:
   identical to the uninterrupted sharded reference, accounting balanced;
 * graceful degradation: repeated exchange overflow triggers the logged
   automatic slack escalation at a punctuation boundary, after which the
-  service keeps running (no snapshots: escalation is not replayable).
+  service keeps running;
+* escalation + snapshots now compose (DESIGN.md §2.9): the slack
+  escalations are controller decisions in the snapshot's trace, so a
+  crash mid-escalating-run restores + replays bitwise identical to the
+  uninterrupted escalating run — decision trace included.
 """
 import os
 
@@ -104,7 +108,8 @@ def check_sharded_chaos(app_name, seed):
 def check_overflow_escalation(app_name):
     """A starved exchange (slack 1.0) drops ops; with escalate_overflow
     the service widens the slack at a punctuation boundary and completes
-    (degraded-service mode — snapshots off, escalation not replayable)."""
+    (degraded-service mode, driven by the implicit slack-only
+    controller)."""
     app = ALL_APPS[app_name]
     store = app.make_store()
     eng = DualModeEngine(app, store, EngineConfig(), mesh=MESH,
@@ -130,6 +135,44 @@ def check_overflow_escalation(app_name):
                 dropped=rec.stats["drops"]["exchange"])
 
 
+def check_adaptive_escalation_replay(app_name):
+    """Escalation composes with snapshots: crash after the first slack
+    escalation, restore, replay — bitwise identical to the uninterrupted
+    escalating run, decision trace included (DESIGN.md §2.9)."""
+    app = ALL_APPS[app_name]
+    mk_eng = lambda: DualModeEngine(app, app.make_store(), EngineConfig(),
+                                    mesh=MESH, exchange_slack=1.0)
+    src = lambda: _mk_source(app, n_events=320, seed=9)
+    kw = dict(punct_interval=INTERVAL, chunk_intervals=2, watermark=WM,
+              escalate_overflow=2, escalate_factor=2.0, snapshot_every=2)
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        ref = StreamService(mk_eng(), ServiceConfig(ckpt_dir=d1,
+                                                    **kw)).run(src())
+        if ref.stats["exchange"]["escalations"] == 0:
+            return dict(ok=True, skipped="no escalation at slack 1.0")
+        svc = StreamService(mk_eng(), ServiceConfig(ckpt_dir=d2, **kw))
+        try:
+            svc.run(src(),
+                    crash_after_interval=ref.decisions[0]["g"] + 1)
+            return dict(ok=False, why="injected crash did not fire")
+        except RuntimeError:
+            pass
+        rec = svc.resume(src())
+        if rec.decisions != ref.decisions:
+            return dict(ok=False,
+                        why=f"decision traces differ: {rec.decisions} "
+                            f"!= {ref.decisions}")
+        if not np.array_equal(rec.final_values, ref.final_values):
+            return dict(ok=False, why="final state differs after recovery")
+        snap = rec.stats["replayed"] // INTERVAL
+        why = _outputs_equal(rec.outputs, ref.outputs[snap:])
+        if why:
+            return dict(ok=False, why=why)
+        return dict(ok=True, escalations=ref.stats["exchange"]["escalations"],
+                    decisions=len(ref.decisions), resumed_from=snap)
+
+
 def main():
     out = {}
 
@@ -143,6 +186,7 @@ def main():
     run("gs/chaos-0", check_sharded_chaos, "gs", 0)
     run("gs/chaos-3", check_sharded_chaos, "gs", 3)
     run("gs/escalation", check_overflow_escalation, "gs")
+    run("gs/adaptive-replay", check_adaptive_escalation_replay, "gs")
     print(json.dumps(out))
 
 

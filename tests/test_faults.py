@@ -42,11 +42,13 @@ from repro.ckpt import (checkpoint_steps, latest_step, latest_valid_step,
                         load_checkpoint, save_checkpoint, verify_checkpoint)
 from repro.core.intervals import ReplaySource, WatermarkPolicy
 from repro.core.scheduler import DualModeEngine, EngineConfig
-from repro.runtime.faults import (EXECUTOR_HANG, SITE_KINDS, SNAPSHOT_PUBLISH,
-                                  SOURCE_PULL, Fault, FaultPlane,
-                                  InjectedCrashError, TransientSourceError,
-                                  corrupt_snapshot, random_schedule,
-                                  schedule_from_json, schedule_to_json)
+from repro.runtime.controller import ControllerConfig
+from repro.runtime.faults import (CONTROLLER_DECIDE, EXECUTOR_HANG,
+                                  SITE_KINDS, SNAPSHOT_PUBLISH, SOURCE_PULL,
+                                  Fault, FaultPlane, InjectedCrashError,
+                                  TransientSourceError, corrupt_snapshot,
+                                  random_schedule, schedule_from_json,
+                                  schedule_to_json)
 from repro.runtime.service import (ExecutorHungError, ServiceConfig,
                                    StreamService)
 from repro.runtime.straggler import StragglerPolicy
@@ -154,11 +156,16 @@ def test_chaos_fires_every_site_across_sweep(tmp_path):
     """The seeds above aren't vacuous: across a seed range the generator
     schedules every site at least once."""
     sites = set()
-    for seed in range(16):
+    for seed in range(24):
         for f in random_schedule(seed, n_pulls=15, n_chunks=5,
-                                 n_snapshots=2):
+                                 n_snapshots=2, n_decisions=3):
             sites.add(f.site)
     assert sites == set(SITE_KINDS), sites
+    # ... and with the controller site closed (the non-adaptive default)
+    # no pre-existing seed's schedule changes
+    for seed in range(16):
+        sched = random_schedule(seed, n_pulls=15, n_chunks=5, n_snapshots=2)
+        assert all(f.site != CONTROLLER_DECIDE for f in sched)
 
 
 # ---------------------------------------------------------------------------
@@ -367,21 +374,60 @@ def test_executor_exception_surfaces_with_stats_and_no_leaked_threads(
         "leaked a service thread"
 
 
-def test_escalation_excludes_snapshots():
-    """Automatic slack escalation changes drop behavior mid-run, so it is
-    statically incompatible with exact snapshot/replay."""
-    with pytest.raises(AssertionError, match="not replayable"):
-        ServiceConfig(punct_interval=INTERVAL, chunk_intervals=2,
-                      snapshot_every=4, ckpt_dir="/tmp/x",
-                      escalate_overflow=2)
+def test_controller_decide_crash_recovers_bitwise(tmp_path):
+    """The new ``controller.decide`` site: crash BETWEEN a decision and
+    the snapshot that would have recorded it.  The decision dies with
+    the run, is recomputed from the replayed record window after
+    restore, and the continuation is bitwise identical to the
+    uninterrupted adaptive run — decision trace included
+    (DESIGN.md §2.9 replay contract)."""
+    from repro.core.intervals import PhasedReplaySource
+
+    app = ALL_APPS["gs"]
+    mk_storm = lambda: PhasedReplaySource(app.gen_events, [
+        (4 * INTERVAL, dict(theta=0.2)),
+        (8 * INTERVAL, dict(theta=2.5)),
+        (4 * INTERVAL, dict(theta=0.2)),
+    ], seed=7, arrival_batch=2 * INTERVAL, jitter=JITTER)
+    eng = DualModeEngine(app, app.make_store(), EngineConfig())
+    ctl = ControllerConfig(window=2, sustain=2, cooldown=2,
+                           degrade_scheme="lock", degrade_chain_frac=0.6)
+    cfg = chaos_cfg(tmp_path / "ctl", controller=ctl)
+    ref = StreamService(eng, chaos_cfg(None, controller=ctl)).run(mk_storm())
+    assert any(d["knob"] == "scheme" for d in ref.decisions), ref.decisions
+
+    plane = FaultPlane([Fault(site=CONTROLLER_DECIDE, at=0, kind="crash")])
+    svc = StreamService(eng, cfg)
+    with pytest.raises(InjectedCrashError, match="decision boundary"):
+        svc.run(mk_storm(), faults=plane)
+    crashed = svc.last_run
+    assert crashed.stats["crashed"] and crashed.stats["faults"]
+    assert conservation_ok(crashed.stats)
+    # the dying run DID make the decision...
+    assert crashed.decisions and \
+        crashed.decisions[0] == ref.decisions[0]
+    # ...but no published snapshot recorded it (strict-prefix contract)
+    from repro.ckpt import read_manifest_meta
+    for step in crashed.snapshots:
+        meta = read_manifest_meta(cfg.ckpt_dir, step)
+        assert all(d["g"] < step for d in meta["controller"]["trace"])
+
+    rec = StreamService(eng, cfg).resume(mk_storm())
+    assert rec.decisions == ref.decisions, \
+        (rec.decisions, ref.decisions)
+    snap = rec.stats["replayed"] // INTERVAL
+    np.testing.assert_array_equal(rec.final_values, ref.final_values)
+    assert_outputs_identical(rec.outputs, ref.outputs[snap:])
 
 
 # ---------------------------------------------------------------------------
 # 6. schedule generator properties (hypothesis)
 # ---------------------------------------------------------------------------
-def _schedule_valid(sched, n_pulls, n_chunks, n_snapshots):
+def _schedule_valid(sched, n_pulls, n_chunks, n_snapshots,
+                    n_decisions=0):
     ranges = {SOURCE_PULL: n_pulls, "executor.crash": n_chunks,
-              EXECUTOR_HANG: n_chunks, SNAPSHOT_PUBLISH: n_snapshots}
+              EXECUTOR_HANG: n_chunks, SNAPSHOT_PUBLISH: n_snapshots,
+              CONTROLLER_DECIDE: n_decisions}
     seen = set()
     hangs = 0
     for f in sched:
@@ -400,6 +446,9 @@ def test_schedule_generator_basic():
     _schedule_valid(sched, 15, 5, 2)
     assert schedule_from_json(schedule_to_json(sched)) == sched
     assert random_schedule(11, n_pulls=0, n_chunks=0, n_snapshots=0) == []
+    _schedule_valid(random_schedule(3, n_pulls=15, n_chunks=5,
+                                    n_snapshots=2, n_decisions=4),
+                    15, 5, 2, 4)
 
 
 # guarded import (not importorskip: that would skip the whole module and
@@ -412,17 +461,18 @@ except ImportError:     # pragma: no cover - hypothesis is in requirements-dev
 if st is not None:
     @settings(max_examples=50, deadline=None)
     @given(seed=st.integers(0, 2**31 - 1), n_pulls=st.integers(0, 40),
-           n_chunks=st.integers(0, 12), n_snapshots=st.integers(0, 6))
+           n_chunks=st.integers(0, 12), n_snapshots=st.integers(0, 6),
+           n_decisions=st.integers(0, 6))
     def test_schedule_generator_deterministic_and_valid(
-            seed, n_pulls, n_chunks, n_snapshots):
+            seed, n_pulls, n_chunks, n_snapshots, n_decisions):
         a = random_schedule(seed, n_pulls=n_pulls, n_chunks=n_chunks,
-                            n_snapshots=n_snapshots)
+                            n_snapshots=n_snapshots, n_decisions=n_decisions)
         b = random_schedule(seed, n_pulls=n_pulls, n_chunks=n_chunks,
-                            n_snapshots=n_snapshots)
+                            n_snapshots=n_snapshots, n_decisions=n_decisions)
         assert a == b, "schedule is not a pure function of its seed"
-        _schedule_valid(a, n_pulls, n_chunks, n_snapshots)
+        _schedule_valid(a, n_pulls, n_chunks, n_snapshots, n_decisions)
         assert schedule_from_json(schedule_to_json(a)) == a
-        if n_pulls or n_chunks or n_snapshots:
+        if n_pulls or n_chunks or n_snapshots or n_decisions:
             assert len(a) >= 1, \
                 "non-empty site ranges must schedule a fault"
 
