@@ -10,6 +10,34 @@ import subprocess
 import sys
 
 
+def run_reshard(quick: bool = True, smoke: bool = False):
+    """Skew-storm A/B (DESIGN.md §2.10): static provisioning vs elastic
+    resharding through a calm -> aligned-Zipf ramp -> theta=2.5 peak ->
+    calm storm.  Rows interleave the static and elastic plans per storm
+    phase; the elastic peak row carries its speedup over the never-drops
+    static-slack8 baseline."""
+    worker = os.path.join(os.path.dirname(__file__), "fig14_numa_worker.py")
+    size = "smoke" if smoke else ("quick" if quick else "full")
+    proc = subprocess.run([sys.executable, worker, "reshard", size],
+                          capture_output=True, text=True, timeout=1800)
+    if proc.returncode != 0:
+        return [dict(fig="reshard", error=proc.stderr[-500:])]
+    raw = json.loads(proc.stdout.strip().splitlines()[-1])
+    base = {r["phase"]: r for r in raw if r["plan"] == "static-slack8"}
+    rows = []
+    # interleave: phase-major, static rows before the elastic row
+    order = {p: i for i, p in enumerate(
+        ("calm", "ramp", "peak", "cooldown", "all"))}
+    for r in sorted(raw, key=lambda r: (order.get(r["phase"], 99),
+                                        r["elastic"], -r["slack"])):
+        r = dict(r, fig="reshard", app="gs", kind="reshard", size=size)
+        b = base.get(r["phase"])
+        if r["elastic"] and b and b["events_per_s"] > 0:
+            r["speedup_vs_static"] = r["events_per_s"] / b["events_per_s"]
+        rows.append(r)
+    return rows
+
+
 def run(quick: bool = True):
     worker = os.path.join(os.path.dirname(__file__), "fig14_numa_worker.py")
     proc = subprocess.run([sys.executable, worker], capture_output=True,

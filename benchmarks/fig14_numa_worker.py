@@ -30,6 +30,125 @@ from repro.core.sharded import LAYOUTS, evaluate_sharded        # noqa: E402
 from repro.launch.hlo_analysis import analyze_hlo               # noqa: E402
 
 
+# ---------------------------------------------------------------------------
+# Skew-storm mode (``reshard`` argv): elastic resharding A/B (DESIGN.md §2.10)
+# ---------------------------------------------------------------------------
+# One seeded storm -- calm, a mild *aligned* ramp (the whole Zipf head
+# collides on one ownership residue class), the theta=2.5 peak, calm --
+# replayed under three provisioning policies:
+#
+#   static-slack8   worst-case capacity: never drops, big exchange shapes
+#   static-slack2   lean capacity, no migration: overflow-drops in the storm
+#   elastic-slack2  lean capacity + skew-aware migration: the ramp trips the
+#                   controller before the peak lands, so it keeps slack-2
+#                   shapes AND zero drops
+#
+# Per-phase aggregates exclude the first chunk and migration chunks (both
+# pay an XLA compile; steady-state throughput is the claim — the one-time
+# migration cost is reported separately on each row as ``migrations`` /
+# ``apply_s``).
+
+RESHARD_SIZES = dict(
+    # interval, phase lengths (intervals), ramp theta, trigger, moves
+    full=dict(interval=256, calm=4, ramp=6, peak=8, ramp_theta=0.2,
+              imbalance=1.4, moves=64, lean=2.0),
+    smoke=dict(interval=64, calm=2, ramp=4, peak=4, ramp_theta=0.6,
+               imbalance=1.4, moves=24, lean=8.0),
+)
+
+
+def _storm_source(app, spec):
+    from repro.core.intervals import PhasedReplaySource
+    iv = spec["interval"]
+    return PhasedReplaySource(
+        app.gen_events,
+        [(spec["calm"] * iv, {}),
+         (spec["ramp"] * iv, dict(theta=spec["ramp_theta"], align_mod=8)),
+         (spec["peak"] * iv, dict(theta=2.5, align_mod=8)),
+         (spec["calm"] * iv, {})],
+        seed=11, arrival_batch=128, jitter=4)
+
+
+PHASE_NAMES = ("calm", "ramp", "peak", "cooldown")
+
+
+def _reshard_run(app, store, mesh, spec, slack, elastic):
+    from repro.core.intervals import WatermarkPolicy
+    from repro.runtime.controller import ControllerConfig
+    from repro.runtime.service import ServiceConfig, StreamService
+
+    ctl = None
+    if elastic:
+        ctl = ControllerConfig(window=4, sustain=2, cooldown=4,
+                               slack_widen=False,
+                               reshard_imbalance=spec["imbalance"],
+                               reshard_max_moves=spec["moves"])
+    eng = DualModeEngine(app, store, EngineConfig(), mesh=mesh,
+                         exchange_slack=slack)
+    cfg = ServiceConfig(punct_interval=spec["interval"], chunk_intervals=2,
+                        watermark=WatermarkPolicy(allowed_lateness=4),
+                        chunk_record_ring=64, controller=ctl)
+    src = _storm_source(app, spec)
+    rec = StreamService(eng, cfg).run(src)
+    trace_out = os.environ.get("RESHARD_TRACE_OUT")
+    if elastic and trace_out:
+        with open(trace_out, "w") as f:
+            for d in rec.decisions:
+                f.write(json.dumps(d) + "\n")
+
+    place = rec.stats.get("placement") or {}
+    migs = place.get("migrations", [])
+    mig_g = {m["g"] for m in migs}
+    phases = {}
+    for c in rec.chunk_records:
+        ph = src.phase_of_interval(c["g0"], spec["interval"])
+        d = phases.setdefault(ph, dict(events=0, lat_s=0.0, drops=0,
+                                       chunks=0))
+        d["drops"] += int(c.get("x_drop", 0))
+        # steady state only: skip the compile chunk + migration chunks
+        if c["i"] == 0 or c["g0"] in mig_g:
+            continue
+        d["events"] += int(c["events"])
+        d["lat_s"] += float(c["lat_s"])
+        d["chunks"] += 1
+    plan = (f"elastic-slack{slack:g}" if elastic
+            else f"static-slack{slack:g}")
+    shared = dict(plan=plan, slack=slack, elastic=elastic,
+                  capacity=int(rec.stats["exchange"]["capacity"]),
+                  migrations=len(migs),
+                  moved_rows=int(place.get("moved_rows", 0)),
+                  apply_s=float(sum(m["apply_s"] for m in migs)),
+                  imbalance=place.get("imbalance"))
+    rows = []
+    for ph, d in sorted(phases.items()):
+        rows.append(dict(shared, phase=PHASE_NAMES[ph],
+                         events_per_s=(d["events"] / d["lat_s"]
+                                       if d["lat_s"] else 0.0),
+                         wall_s=d["lat_s"], chunks=d["chunks"],
+                         drops=d["drops"]))
+    rows.append(dict(shared, phase="all",
+                     events_per_s=rec.sustained_events_per_s(),
+                     wall_s=float(sum(c["lat_s"]
+                                      for c in rec.chunk_records)),
+                     chunks=len(rec.chunk_records),
+                     drops=int(rec.stats["drops"]["exchange"])))
+    return rows
+
+
+def main_reshard(size):
+    from repro.apps import GS
+    spec = RESHARD_SIZES["smoke" if size == "smoke" else "full"]
+    mesh = jax.make_mesh((8,), ("dev",))
+    store = GS.make_store()
+    lean = spec["lean"]
+    rows = []
+    rows += _reshard_run(GS, store, mesh, spec, 8.0, elastic=False)
+    if lean != 8.0:
+        rows += _reshard_run(GS, store, mesh, spec, lean, elastic=False)
+    rows += _reshard_run(GS, store, mesh, spec, lean, elastic=True)
+    print(json.dumps(rows))
+
+
 def main():
     mesh = jax.make_mesh((2, 4), ("socket", "core"))
     rng = np.random.default_rng(14)
@@ -95,4 +214,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    if len(sys.argv) > 1 and sys.argv[1] == "reshard":
+        main_reshard(sys.argv[2] if len(sys.argv) > 2 else "quick")
+    else:
+        main()

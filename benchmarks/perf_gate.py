@@ -2,7 +2,9 @@
 
 Runs the same tiny smoke cells as CI's bench-smoke job (``fused_stream``
 and ``restructure`` with ``smoke=True`` — seconds, not minutes) in
-process, matches rows against ``benchmarks/baselines/perf_gate_smoke.json``
+process, plus the elastic-resharding storm's smoke cells (peak-phase and
+aggregate rows per plan, so a migration-path slowdown shows up in the
+gate), matches rows against ``benchmarks/baselines/perf_gate_smoke.json``
 by their identifying fields, and reports per-row deltas on the min-wall
 estimator.
 
@@ -33,9 +35,11 @@ BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
                         "perf_gate_smoke.json")
 
 # identifying fields (everything measured — wall_s etc. — is excluded);
-# together these are unique across both smoke modules' rows
+# together these are unique across the smoke modules' rows (``plan`` and
+# ``phase`` identify the elastic-resharding storm cells)
 KEY_FIELDS = ("fig", "kind", "app", "scheme", "layout", "interval",
-              "n", "n_slots", "n_route", "shape", "fused")
+              "n", "n_slots", "n_route", "shape", "fused", "plan",
+              "phase")
 METRIC = "wall_s"
 
 
@@ -49,7 +53,7 @@ def run_smoke(passes: int = 2) -> List[dict]:
     Runs the whole suite ``passes`` times and keeps the per-row minimum
     — the smoke cells are sub-millisecond, where a single min-of-3 still
     jitters by tens of percent under external load."""
-    from . import fused_stream, restructure_bench
+    from . import fused_stream, reshard_storm, restructure_bench
     best: Dict[str, dict] = {}
     for _ in range(max(1, passes)):
         rows = []
@@ -61,6 +65,13 @@ def run_smoke(passes: int = 2) -> List[dict]:
             k = row_key(r)
             if k not in best or r[METRIC] < best[k][METRIC]:
                 best[k] = r
+    # elastic-resharding storm cells: seconds-scale service runs (one
+    # pass — the min-of-N treatment is for the sub-millisecond cells);
+    # keep the peak-phase and aggregate rows per plan
+    for r in reshard_storm.run(quick=True, smoke=True):
+        if METRIC in r and r.get("phase") in ("peak", "all") \
+                and r[METRIC] > 0:
+            best[row_key(r)] = r
     return list(best.values())
 
 

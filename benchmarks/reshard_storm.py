@@ -1,0 +1,14 @@
+"""Elastic resharding benchmark (DESIGN.md §2.10) — thin module shim.
+
+The measurement lives in ``fig14_numa.run_reshard`` (it shares the
+8-device subprocess worker); registering it as its own module gives it
+its own ``BENCH_reshard.json`` trajectory file.  Rows carry ``plan``
+(static-slack8 / static-slack2 / elastic-slack2) and ``phase`` (calm,
+ramp, peak, cooldown, plus an aggregate ``"all"`` row) interleaved
+phase-major, so the static/elastic A/B reads off adjacent rows; the
+elastic peak row carries ``speedup_vs_static`` against the worst-case
+provisioned static-slack8 baseline.
+"""
+from __future__ import annotations
+
+from .fig14_numa import run_reshard as run  # noqa: F401

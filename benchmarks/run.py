@@ -24,15 +24,15 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: fig8,fig9,fig10,fig11,fig12,fig13,"
                          "fig14,roofline,fused_stream,sharded_stream,"
-                         "restructure,service,adaptive")
+                         "restructure,service,adaptive,reshard")
     args, _ = ap.parse_known_args()
     quick = not args.full
 
     from . import (adaptive_storm, fig8_throughput, fig9_breakdown,
                    fig10_multipartition, fig11_workload, fig12_interval,
                    fig13_latency, fig14_numa, fused_stream,
-                   restructure_bench, roofline, service_latency,
-                   sharded_stream)
+                   reshard_storm, restructure_bench, roofline,
+                   service_latency, sharded_stream)
     modules = dict(fig8=fig8_throughput, fig9=fig9_breakdown,
                    fig10=fig10_multipartition, fig11=fig11_workload,
                    fig12=fig12_interval, fig13=fig13_latency,
@@ -41,7 +41,8 @@ def main() -> None:
                    sharded_stream=sharded_stream,
                    restructure=restructure_bench,
                    service=service_latency,
-                   adaptive=adaptive_storm)
+                   adaptive=adaptive_storm,
+                   reshard=reshard_storm)
     only = set(args.only.split(",")) if args.only else set(modules)
 
     os.makedirs("results/bench", exist_ok=True)

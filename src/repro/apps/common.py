@@ -19,16 +19,39 @@ def zipf_probs(n_keys: int, theta: float) -> np.ndarray:
     return w / w.sum()
 
 
+def align_keys(keys: np.ndarray, n_keys: int, align_mod: int) -> np.ndarray:
+    """Bijectively remap keys so the Zipf-hot head lands on ONE residue
+    class mod ``align_mod`` (k -> align_mod*(k % K) + k//K, K = n_keys /
+    align_mod): the hottest keys map to 0, align_mod, 2*align_mod, ...
+
+    The round-robin ownership striping (``owner = uid % n_shards``)
+    neutralises plain Zipf skew by construction; this adversarial
+    permutation re-concentrates it on one shard — the skew-storm
+    workload that elastic resharding exists to absorb.  Distinctness
+    within a transaction is preserved (the map is a bijection).
+    """
+    if align_mod <= 1:
+        return keys
+    assert n_keys % align_mod == 0, (n_keys, align_mod)
+    k_per = n_keys // align_mod
+    return (align_mod * (keys % k_per) + keys // k_per).astype(keys.dtype)
+
+
 def sample_keys(rng: np.random.Generator, n_events: int, ops_per_txn: int,
-                n_keys: int, theta: float) -> np.ndarray:
-    """[n_events, ops_per_txn] Zipf-skewed keys, distinct within a txn."""
+                n_keys: int, theta: float,
+                align_mod: int = 0) -> np.ndarray:
+    """[n_events, ops_per_txn] Zipf-skewed keys, distinct within a txn.
+
+    ``align_mod`` > 1 post-permutes through :func:`align_keys` so the hot
+    head collides on one residue class (skew-storm workloads)."""
     p = zipf_probs(n_keys, theta)
     if ops_per_txn == 1:
-        return rng.choice(n_keys, size=(n_events, 1), p=p).astype(np.int32)
+        out = rng.choice(n_keys, size=(n_events, 1), p=p).astype(np.int32)
+        return align_keys(out, n_keys, align_mod)
     out = np.empty((n_events, ops_per_txn), np.int32)
     for i in range(n_events):
         out[i] = rng.choice(n_keys, size=ops_per_txn, replace=False, p=p)
-    return out
+    return align_keys(out, n_keys, align_mod)
 
 
 def sample_multipartition_keys(

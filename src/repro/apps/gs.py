@@ -32,12 +32,14 @@ def make_gs_store(n_keys: int = N_KEYS, rng: np.random.Generator | None = None):
 def gen_events(rng: np.random.Generator, n_events: int, *,
                n_keys: int = N_KEYS, theta: float = 0.6,
                read_ratio: float = 0.5, n_partitions: int = 0,
-               mp_ratio: float = 0.0, mp_len: int = 4) -> Dict[str, np.ndarray]:
+               mp_ratio: float = 0.0, mp_len: int = 4,
+               align_mod: int = 0) -> Dict[str, np.ndarray]:
     if n_partitions:
         keys = sample_multipartition_keys(rng, n_events, TXN_LEN, n_keys,
                                           theta, n_partitions, mp_ratio, mp_len)
     else:
-        keys = sample_keys(rng, n_events, TXN_LEN, n_keys, theta)
+        keys = sample_keys(rng, n_events, TXN_LEN, n_keys, theta,
+                           align_mod=align_mod)
     return dict(
         keys=keys,
         is_read=(rng.random(n_events) < read_ratio),

@@ -61,11 +61,13 @@ def make_ob_store(n_keys: int = N_KEYS, rng: np.random.Generator | None = None):
 
 
 def gen_events(rng: np.random.Generator, n_events: int, *,
-               n_keys: int = N_KEYS, theta: float = 0.6) -> Dict[str, np.ndarray]:
+               n_keys: int = N_KEYS, theta: float = 0.6,
+               align_mod: int = 0) -> Dict[str, np.ndarray]:
     kind = rng.choice([BID, ALTER, TOP], size=n_events, p=[0.75, 0.125, 0.125])
     return dict(
         kind=kind.astype(np.int32),
-        keys=sample_keys(rng, n_events, MAX_OPS, n_keys, theta),
+        keys=sample_keys(rng, n_events, MAX_OPS, n_keys, theta,
+                         align_mod=align_mod),
         prices=rng.uniform(10.0, 100.0, (n_events, MAX_OPS)).astype(np.float32),
         qtys=rng.uniform(1.0, 20.0, (n_events, MAX_OPS)).astype(np.float32),
     )

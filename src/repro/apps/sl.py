@@ -36,9 +36,11 @@ def make_sl_store(n_keys: int = N_KEYS, rng: np.random.Generator | None = None):
 
 def gen_events(rng: np.random.Generator, n_events: int, *,
                n_keys: int = N_KEYS, theta: float = 0.6,
-               transfer_ratio: float = 0.5) -> Dict[str, np.ndarray]:
-    acct = sample_keys(rng, n_events, 2, n_keys, theta)  # [src, dst] distinct
-    asset = sample_keys(rng, n_events, 2, n_keys, theta)
+               transfer_ratio: float = 0.5,
+               align_mod: int = 0) -> Dict[str, np.ndarray]:
+    # [src, dst] distinct within each pair
+    acct = sample_keys(rng, n_events, 2, n_keys, theta, align_mod=align_mod)
+    asset = sample_keys(rng, n_events, 2, n_keys, theta, align_mod=align_mod)
     return dict(
         src_acct=acct[:, 0], dst_acct=acct[:, 1],
         src_asset=asset[:, 0], dst_asset=asset[:, 1],

@@ -27,7 +27,7 @@ import numpy as np
 from repro.core.blotter import AppSpec, Blotter
 from repro.core.types import ASSOC_FUNS, make_store
 
-from .common import zipf_probs
+from .common import align_keys, zipf_probs
 
 N_SEGMENTS = 100
 WIDTH = 32          # LPC sketch lanes (also holds [sum, count] for speed)
@@ -42,10 +42,14 @@ def make_tp_store(n_segments: int = N_SEGMENTS, **_):
 
 def gen_events(rng: np.random.Generator, n_events: int, *,
                n_segments: int = N_SEGMENTS, theta: float = 0.2,
-               n_vehicles: int = 5_000) -> Dict[str, np.ndarray]:
+               n_vehicles: int = 5_000,
+               align_mod: int = 0) -> Dict[str, np.ndarray]:
     p = zipf_probs(n_segments, theta)
+    seg = rng.choice(n_segments, size=n_events, p=p).astype(np.int32)
+    if align_mod > 1:
+        seg = align_keys(seg, n_segments, align_mod)
     return dict(
-        segment=rng.choice(n_segments, size=n_events, p=p).astype(np.int32),
+        segment=seg,
         vehicle=rng.integers(0, n_vehicles, n_events).astype(np.int32),
         speed=rng.uniform(20.0, 120.0, n_events).astype(np.float32),
     )

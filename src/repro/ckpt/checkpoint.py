@@ -126,7 +126,14 @@ def read_manifest_meta(ckpt_dir: str, step: int) -> Optional[dict]:
     a missing/torn manifest).  This is the service's replay record: for
     adaptive runs it carries the controller decision trace + record
     window alongside ``intervals_done`` (DESIGN.md §2.9), so ``resume``
-    can rebuild the plan without loading any leaf."""
+    can rebuild the plan without loading any leaf.
+
+    Elastic runs additionally record ``ownership`` (owner count + the
+    override list live at publish time, DESIGN.md §2.10).  It is
+    informational: snapshot *values* are always written in canonical
+    single-device layout, so restore re-derives the placement by
+    replaying the decision trace and rebinds the engine to it — a
+    snapshot taken under any placement restores onto any other."""
     manifest = _read_manifest(ckpt_dir, step)
     if manifest is None:
         return None

@@ -54,6 +54,9 @@ class Ownership:
     ``s_pad``: n_owners * per (>= S; trailing slots are dead padding)
     ``slot_is_max``: bool[s_pad+1] per *permuted* slot, or None when the
     store has no max-type tables.
+    ``overrides``: sorted ``((uid, owner), ...)`` deviations from the
+    round-robin striping ``uid % n_owners`` — the skew-aware placement
+    the controller migrates onto (empty at construction).
     """
 
     n_owners: int
@@ -61,22 +64,149 @@ class Ownership:
     s_pad: int
     fwd: jnp.ndarray
     slot_is_max: Optional[jnp.ndarray]
+    overrides: tuple = ()
 
 
-def build_ownership(store: StateStore, n_owners: int) -> Ownership:
+def owner_of_uids(n_slots: int, n_owners: int,
+                  overrides=()) -> np.ndarray:
+    """i32[S] owner per uid: round-robin striping + explicit overrides."""
+    owner = (np.arange(n_slots, dtype=np.int64) % n_owners).astype(np.int32)
+    for u, o in overrides:
+        owner[int(u)] = int(o)
+    return owner
+
+
+def build_ownership(store: StateStore, n_owners: int,
+                    overrides=()) -> Ownership:
+    """Ownership permutation: striping + skew-aware ``overrides``.
+
+    Slots are laid out owner-major, uid-ascending within each owner —
+    with no overrides this reproduces the closed form
+    ``(uid % n) * per + uid // n`` exactly (rank-within-owner equals
+    ``uid // n`` under pure striping), so pre-override programs are
+    bit-identical.  Overrides MUST keep every owner's bin within
+    ``per`` slots; :func:`rebalance_ownership` guarantees this by
+    moving keys only in placement-preserving swaps.
+    """
     s = store.n_slots
     n_owners = max(int(n_owners), 1)
     per = -(-s // n_owners)
     s_pad = per * n_owners
+    overrides = tuple(sorted((int(u), int(o)) for u, o in overrides))
+    owner = owner_of_uids(s, n_owners, overrides)
+    counts = np.bincount(owner, minlength=n_owners)
+    assert counts.max(initial=0) <= per, (
+        f"override bin overflow: {counts.max()} > {per}")
+    order = np.lexsort((np.arange(s), owner))  # owner-major, uid-asc
+    new_np = np.empty(s, np.int32)
+    ranks = np.arange(s, dtype=np.int64) - np.repeat(
+        np.cumsum(np.concatenate([[0], counts[:-1]])), counts)
+    new_np[order] = (owner[order].astype(np.int64) * per + ranks).astype(
+        np.int32)
+    new = jnp.asarray(new_np)
     old = jnp.arange(s)
-    new = ((old % n_owners) * per + old // n_owners).astype(jnp.int32)
     fwd = jnp.full((s + 1,), s_pad, jnp.int32).at[old].set(new)
     sim = None
     if any(store.table_is_max):
         flags = store.uid_is_max()  # [S+1]
         sim = jnp.zeros((s_pad + 1,), bool).at[new].set(flags[:-1])
     return Ownership(n_owners=n_owners, per=per, s_pad=s_pad, fwd=fwd,
-                     slot_is_max=sim)
+                     slot_is_max=sim, overrides=overrides)
+
+
+def rebalance_ownership(n_slots: int, n_owners: int, overrides,
+                        shard_load: np.ndarray, hot,
+                        max_moves: int = 16):
+    """Greedy skew-aware placement from the observed access histogram.
+
+    ``shard_load``: i64[n_owners] ops served per shard over the decision
+    window; ``hot``: ``[(uid, count), ...]`` the window's hottest slots.
+    Each step moves the heaviest not-yet-moved hot uid from the most
+    loaded shard to the least loaded one, *swapping* it with that
+    shard's coldest hot-listed (or synthetic zero-load) resident so
+    every bin keeps exactly its striped size — ``per``/``s_pad`` and
+    all block shapes are migration-invariant.  Pure host arithmetic,
+    deterministic (ties broken by lowest uid), replay-safe: the result
+    depends only on the arguments, which the decision trace records.
+
+    Returns the new overrides tuple (sorted), or the input overrides
+    unchanged when no beneficial move exists.
+    """
+    n_owners = max(int(n_owners), 1)
+    if n_owners <= 1 or not len(hot):
+        return tuple(sorted((int(u), int(o)) for u, o in overrides))
+    load = np.asarray(shard_load, np.int64).copy()
+    assert load.shape == (n_owners,)
+    owner = owner_of_uids(n_slots, n_owners, overrides)
+    hot = sorted(((int(u), int(c)) for u, c in hot),
+                 key=lambda t: (-t[1], t[0]))
+    hot_count = {u: c for u, c in hot}
+    moved: set = set()
+    for u, c in hot:
+        if len(moved) >= 2 * max_moves:
+            break
+        if u in moved or c <= 0:
+            continue
+        src = int(owner[u])
+        dst = int(np.argmin(load))
+        if dst == src:
+            continue
+        # only move when it strictly shrinks the src/dst imbalance
+        if load[src] - c < load[dst]:
+            continue
+        # swap victim: dst's coldest resident (prefer load-0, lowest uid)
+        residents = np.flatnonzero(owner == dst)
+        victim, v_load = -1, None
+        for v in residents:
+            if int(v) in moved:
+                continue
+            vl = hot_count.get(int(v), 0)
+            if v_load is None or vl < v_load:
+                victim, v_load = int(v), vl
+                if vl == 0:
+                    break
+        if victim < 0:
+            continue
+        owner[u], owner[victim] = dst, src
+        load[src] += v_load - c
+        load[dst] += c - v_load
+        moved.add(u)
+        moved.add(victim)
+    stripe = np.arange(n_slots, dtype=np.int64) % n_owners
+    diff = np.flatnonzero(owner != stripe)
+    return tuple((int(u), int(owner[u])) for u in diff)
+
+
+def migration_plan(old: Ownership, new: Ownership):
+    """Host-side plan for the moved-rows migration exchange.
+
+    For each device d and local block row r (permuted uid p = d*per+r):
+      ``dst``  i32[n_dev, per]: new owner of the uid stored there under
+               ``old`` (== d when the row stays put; dead padding rows
+               route to their own device so no traffic is generated)
+      ``nidx`` i32[n_dev, per]: the row's index in the NEW owner's block
+               (dead rows -> per, the local padding slot, overwritten by
+               the pad-row reset)
+      ``cap``  int: max rows moved between any (src, dst) pair — the
+               all_to_all bucket capacity.  Exact by construction: a
+               migration never drops rows.
+    Shapes are migration-invariant because swaps preserve bin sizes.
+    """
+    assert old.per == new.per and old.n_owners == new.n_owners
+    n_dev, per = old.n_owners, old.per
+    fwd_o = np.asarray(old.fwd)[:-1]   # [S]
+    fwd_n = np.asarray(new.fwd)[:-1]
+    dst = np.tile(np.arange(n_dev, dtype=np.int32)[:, None], (1, per))
+    nidx = np.full((n_dev, per), per, np.int32)
+    dst.flat[fwd_o] = (fwd_n // per).astype(np.int32)
+    nidx.flat[fwd_o] = (fwd_n % per).astype(np.int32)
+    src = np.repeat(np.arange(n_dev), per).reshape(n_dev, per)
+    movers = dst != src
+    cap = 0
+    if movers.any():
+        pair = src[movers].astype(np.int64) * n_dev + dst[movers]
+        cap = int(np.bincount(pair).max())
+    return dst, nidx, max(1, cap)
 
 
 def permute_values(own: Ownership, values: jnp.ndarray) -> jnp.ndarray:

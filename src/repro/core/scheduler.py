@@ -232,6 +232,50 @@ class DualModeEngine:
         """Materialize a chunk's per-interval outputs (blocks on D2H)."""
         return self._outs(res_all, ebs_all, n_intervals)
 
+    # -- elastic resharding / carry API (DESIGN.md §2.10) -----------------
+    # The service's chunk loop threads an OPAQUE carry: canonical [S+1, W]
+    # values on the single-device driver, the resident ownership-block
+    # layout on the sharded one.  Snapshots and final stats always go
+    # through carry_out so checkpoints stay canonical (restorable onto
+    # any ownership/layout).
+    def carry_in(self, values):
+        """Canonical [S+1, W] values -> the driver's resident carry."""
+        if self._sharded is not None:
+            return self._sharded.carry_in(values)
+        return values
+
+    def carry_out(self, carry):
+        """Resident carry -> canonical [S+1, W] values (no donation)."""
+        if self._sharded is not None:
+            return self._sharded.carry_out(carry)
+        return carry
+
+    @property
+    def owners(self):
+        """Current ownership overrides (() = pure striping)."""
+        return self._sharded.owners if self._sharded is not None else ()
+
+    @property
+    def reshardable(self) -> bool:
+        return self._sharded is not None and self._sharded.reshardable
+
+    def rebind_ownership(self, overrides) -> None:
+        """Rebind the sharded plan to ``overrides`` WITHOUT moving data —
+        for restores onto a migrated layout (the snapshot's canonical
+        values re-enter through ``carry_in`` under the new binding).
+        Identity on the single-device driver (ownership is a no-op
+        there, so replayed ``reshard`` decisions stay harmless)."""
+        if self._sharded is not None and overrides != self._sharded.owners:
+            self._sharded.set_ownership(overrides)
+
+    def apply_resharding(self, carry, overrides):
+        """Live migration of the resident carry onto ``overrides``
+        (sharded driver; see ``ShardedStream.reshard``).  Returns
+        ``(carry, moved_rows)``; identity on single-device."""
+        if self._sharded is None:
+            return carry, 0
+        return self._sharded.reshard(carry, overrides)
+
 
 def _batches(stream: Dict[str, np.ndarray], interval: int):
     n = len(next(iter(stream.values())))

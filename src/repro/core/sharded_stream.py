@@ -63,9 +63,9 @@ from .engines import (apply_funs, funs_apply_single, simple_affine_luts,
                       tstream_scan_plan)
 from .ownership import (LAYOUTS, bucket_by_owner, build_ownership,
                         build_probe_route, chunk_shard_output,
-                        exchange_capacity, make_local_store, permute_values,
-                        route_gather, unchunk_output, unpermute_values,
-                        unroute_gather)
+                        exchange_capacity, make_local_store, migration_plan,
+                        permute_values, route_gather, unchunk_output,
+                        unpermute_values, unroute_gather)
 from .restructure import Chains, megakernel_engaged, restructure_stream
 from .types import OpBatch, StateStore
 
@@ -89,10 +89,11 @@ class ShardedStream:
     def __init__(self, app: AppSpec, store: StateStore, cfg, mesh,
                  layout: str = "shared_nothing", exchange_slack: float = 2.0):
         assert layout in LAYOUTS, layout
-        if cfg.scheme not in ("tstream", "tstream_scan", "tstream_lockstep"):
+        if cfg.scheme not in ("tstream", "tstream_scan", "tstream_lockstep",
+                              "mvlk"):
             raise ValueError(
-                f"sharded run_stream implements the TStream engine only "
-                f"(got scheme={cfg.scheme!r})")
+                f"sharded run_stream implements the TStream/mvlk engines "
+                f"only (got scheme={cfg.scheme!r})")
         self.app, self.cfg, self.mesh, self.layout = app, cfg, mesh, layout
         self.store = store
         self.exchange_slack = float(exchange_slack)
@@ -114,30 +115,93 @@ class ShardedStream:
             self.n_route = self.n_dev
             self.route_axes = self.axes
         if not self.assoc:
-            # lockstep sharding exchanges gate successes on global op ids;
-            # state must be device-resident and the mesh flat
+            # lockstep sharding (mvlk included: eval_mvlk IS the lockstep
+            # schedule) exchanges gate successes on global op ids; state
+            # must be device-resident and the mesh flat
             assert layout == "shared_nothing" and len(self.axes) == 1, \
                 ("non-associative/gated apps shard under shared_nothing "
                  "on a 1-D mesh")
 
-        self.own = build_ownership(store, n_owners)
-        self.probe = None
-        if getattr(cfg, "use_hash_probe_route", False):
-            fwd = np.asarray(self.own.fwd)[:-1]
-            if layout == "shared_everything":
-                owner = fwd % self.n_dev
-            else:
-                owner = fwd // self.own.per
-            self.probe = build_probe_route(store.n_slots, owner,
-                                           miss_owner=self.n_route)
-        self._impl = jax.jit(partial(_sharded_fused_impl, eng=self),
-                             donate_argnums=0)
+        self._n_owners = n_owners
+        self._bind_ownership(())
         # same output program as the single-device drivers (_post_stream):
         # identical function + identical [n_intervals, N, ...] shapes =>
         # identical compilation => bit-identical outputs
         from .scheduler import _post_stream
         self._post = jax.jit(partial(_post_stream, app=app))
         self.last_stats: Optional[Dict] = None
+
+    def _bind_ownership(self, overrides) -> None:
+        """(Re)build the ownership permutation, routing tables and every
+        jitted entry against ``overrides`` — the one place the sharded
+        plan binds to a placement (construction, restore, migration)."""
+        self.own = build_ownership(self.store, self._n_owners, overrides)
+        self.probe = None
+        if getattr(self.cfg, "use_hash_probe_route", False):
+            fwd = np.asarray(self.own.fwd)[:-1]
+            if self.layout == "shared_everything":
+                owner = fwd % self.n_dev
+            else:
+                owner = fwd // self.own.per
+            self.probe = build_probe_route(self.store.n_slots, owner,
+                                           miss_owner=self.n_route)
+        self._impl = jax.jit(partial(_sharded_blocks_impl, eng=self),
+                             donate_argnums=0)
+        self._to_blocks = jax.jit(partial(_to_blocks_impl, eng=self))
+        # NO donation: snapshots read the carry mid-run and keep using it
+        self._from_blocks = jax.jit(partial(_from_blocks_impl, eng=self))
+
+    @property
+    def owners(self):
+        """Current ownership overrides (sorted ``((uid, owner), ...)``)."""
+        return self.own.overrides
+
+    @property
+    def reshardable(self) -> bool:
+        """Live migration needs one state block per device (the moved-rows
+        exchange is a device-level all_to_all) and >1 owner to move to."""
+        return (self.layout == "shared_nothing" and self.n_dev > 1
+                and self.probe is None)
+
+    def set_ownership(self, overrides) -> None:
+        """Rebind the pre-jitted plan to a new placement WITHOUT touching
+        data — for restoring a snapshot taken on a migrated layout (the
+        snapshot stores canonical-order values; ``carry_in`` lays them
+        out under whatever ownership is bound here)."""
+        overrides = tuple(sorted((int(u), int(o)) for u, o in overrides))
+        if overrides != self.own.overrides:
+            self._bind_ownership(overrides)
+
+    def reshard(self, blocks, overrides):
+        """Live migration: move the block carry onto a new placement.
+
+        Ships ONLY moved rows via the owner-routed ``all_to_all`` (exact
+        capacity from the host-side :func:`migration_plan` — migrations
+        never drop rows), then rebinds the jitted plan to the new
+        ownership.  Returns ``(blocks, moved_rows)``.  Must run at a
+        punctuation boundary with the pipeline drained (the service's
+        snapshot barrier).
+        """
+        assert self.reshardable, (self.layout, self.n_dev)
+        overrides = tuple(sorted((int(u), int(o)) for u, o in overrides))
+        if overrides == self.own.overrides:
+            return blocks, 0
+        new_own = build_ownership(self.store, self._n_owners, overrides)
+        dst, nidx, cap = migration_plan(self.own, new_own)
+        fn = jax.jit(partial(_migrate_impl, eng=self, cap=cap),
+                     donate_argnums=0)
+        blocks, moved = fn(blocks, jnp.asarray(dst), jnp.asarray(nidx))
+        self._bind_ownership(overrides)
+        return blocks, int(jax.device_get(moved))
+
+    # -- block carry <-> canonical values ---------------------------------
+    def carry_in(self, values):
+        """[S+1, W] canonical values -> the resident block carry."""
+        return self._to_blocks(values)
+
+    def carry_out(self, blocks):
+        """Block carry -> [S+1, W] canonical values (no donation)."""
+        return self._from_blocks(blocks)
 
     # -- host driver ------------------------------------------------------
     def run_stream(self, values, event_stream, punct_interval: int):
@@ -161,8 +225,10 @@ class ShardedStream:
             v = np.asarray(v)[: n_intervals * interval]
             batched[k] = jnp.asarray(
                 v.reshape((n_intervals, interval) + v.shape[1:]))
-        res_all, ebs_all, values, stats = self._impl(
-            jnp.array(values, copy=True), batched, jnp.int32(0))
+        blocks = self._to_blocks(jnp.asarray(values))
+        res_all, ebs_all, blocks, stats = self._impl(
+            blocks, batched, jnp.int32(0))
+        values = self._from_blocks(blocks)
         stats = jax.device_get(stats)
         self.last_stats = stats
         total_dropped = int(np.sum(stats["dropped"]))
@@ -187,25 +253,81 @@ class ShardedStream:
         the escalation; results for shipped ops are unaffected, only the
         padding widens)."""
         self.exchange_slack = float(slack)
-        self._impl = jax.jit(partial(_sharded_fused_impl, eng=self),
+        self._impl = jax.jit(partial(_sharded_blocks_impl, eng=self),
                              donate_argnums=0)
 
-    def run_chunk(self, values, batched, ts0: int):
+    def run_chunk(self, blocks, batched, ts0: int):
         """Chunked service entry (see ``DualModeEngine.run_stream_chunk``).
 
-        ``values`` is donated and ``batched`` leaves are
-        ``[K, interval, ...]``; returns unmaterialized device arrays plus
-        the per-chunk exchange stats ``dict`` (dropped/shipped per
-        interval) for the caller to aggregate — overflow is NOT logged
-        here: the service logs each drop category once per run.
+        ``blocks`` is the resident block carry (``carry_in`` of the
+        canonical values — the per-chunk permute/unpermute round-trip of
+        the pre-elastic driver is gone) and is donated; ``batched``
+        leaves are ``[K, interval, ...]``.  Returns unmaterialized device
+        arrays plus the per-chunk exchange stats ``dict`` for the caller
+        to aggregate — overflow is NOT logged here: the service logs each
+        drop category once per run.
         """
-        return self._impl(values, batched, jnp.int32(ts0))
+        return self._impl(blocks, batched, jnp.int32(ts0))
 
 
 # ---------------------------------------------------------------------------
-# the jitted whole-stream program
+# the jitted whole-stream program (block-carry form)
 # ---------------------------------------------------------------------------
-def _sharded_fused_impl(values, events_b, ts0, *, eng: ShardedStream):
+def _lane_width(eng: ShardedStream) -> int:
+    """Pallas fast path: lane-pad state once per stream (operands pad
+    after the exchange so wire bytes stay at W lanes)."""
+    W = eng.app.width
+    if eng.cfg.use_pallas and eng.assoc:
+        from repro.kernels.segscan import kernel as K
+        return max(W, K.LANES)
+    return W
+
+
+def _n_blocks(eng: ShardedStream) -> int:
+    return eng.n_dev if eng.layout == "shared_nothing" else eng.n_sockets
+
+
+def _to_blocks_impl(values, *, eng: ShardedStream):
+    """[S+1, W] canonical values -> the resident block carry.
+
+    The carry IS the per-device state layout — ``[n_blocks*(per+1), Wp]``
+    (one ``[per+1, Wp]`` block per owner, pad chain last) for the
+    partitioned layouts, the full ``[s_pad+1, Wp]`` permuted buffer for
+    shared_everything — so chunks chain block-to-block with NO per-chunk
+    permute/unpermute round-trip.
+    """
+    own, layout = eng.own, eng.layout
+    per, s_pad, W = own.per, own.s_pad, eng.app.width
+    Wp = _lane_width(eng)
+    vperm = permute_values(own, values)                       # [s_pad+1, W]
+    if Wp > W:
+        vperm = jnp.pad(vperm, ((0, 0), (0, Wp - W)))
+    if layout == "shared_everything":
+        return vperm
+    nb = _n_blocks(eng)
+    return jnp.concatenate(
+        [vperm[:-1].reshape(nb, per, Wp),
+         jnp.zeros((nb, 1, Wp), vperm.dtype)],
+        axis=1).reshape(nb * (per + 1), Wp)
+
+
+def _from_blocks_impl(blocks, *, eng: ShardedStream):
+    """Block carry -> [S+1, W] canonical values (exact gathers only)."""
+    own, layout = eng.own, eng.layout
+    per, s_pad, W = own.per, own.s_pad, eng.app.width
+    Wp = _lane_width(eng)
+    if layout == "shared_everything":
+        vperm_out = blocks[:s_pad]
+    else:
+        vperm_out = blocks.reshape(_n_blocks(eng), per + 1, Wp)[:, :per]
+        vperm_out = vperm_out.reshape(s_pad, Wp)
+    vperm_out = vperm_out[:, :W]
+    return unpermute_values(
+        own, jnp.concatenate([vperm_out, jnp.zeros((1, W),
+                                                   vperm_out.dtype)]))
+
+
+def _sharded_blocks_impl(blocks, events_b, ts0, *, eng: ShardedStream):
     from jax.experimental.shard_map import shard_map
 
     app, cfg, own, layout = eng.app, eng.cfg, eng.own, eng.layout
@@ -221,31 +343,18 @@ def _sharded_fused_impl(values, events_b, ts0, *, eng: ShardedStream):
     W = app.width
     has_max = any(eng.store.table_is_max)
     lpad = s_pad if layout == "shared_everything" else per
+    Wp = _lane_width(eng)
 
-    # Pallas fast path: lane-pad state once per stream (operands pad after
-    # the exchange so wire bytes stay at W lanes)
-    Wp = W
-    if cfg.use_pallas and eng.assoc:
-        from repro.kernels.segscan import kernel as K
-        Wp = max(W, K.LANES)
-
-    # ---- state into ownership layout, then per-shard blocks -------------
-    vperm = permute_values(own, values)                       # [s_pad+1, W]
-    if Wp > W:
-        vperm = jnp.pad(vperm, ((0, 0), (0, Wp - W)))
+    # ---- per-slot max flags in carry layout (values-independent) --------
     sim = own.slot_is_max if has_max else jnp.zeros((s_pad + 1,), bool)
     if layout == "shared_everything":
-        blocks, sim_b = vperm, sim
+        sim_b = sim
         state_spec = P()
     else:
-        n_blocks = n_dev if layout == "shared_nothing" else eng.n_sockets
-        blocks = jnp.concatenate(
-            [vperm[:-1].reshape(n_blocks, per, Wp),
-             jnp.zeros((n_blocks, 1, Wp), vperm.dtype)],
-            axis=1).reshape(n_blocks * (per + 1), Wp)
+        nb = _n_blocks(eng)
         sim_b = jnp.concatenate(
-            [sim[:-1].reshape(n_blocks, per),
-             jnp.zeros((n_blocks, 1), bool)], axis=1).reshape(-1)
+            [sim[:-1].reshape(nb, per),
+             jnp.zeros((nb, 1), bool)], axis=1).reshape(-1)
         state_spec = P(axes) if layout == "shared_nothing" else P(axes[0])
 
     body = partial(_stream_body, eng=eng, dims=dict(
@@ -259,30 +368,100 @@ def _sharded_fused_impl(values, events_b, ts0, *, eng: ShardedStream):
         body, mesh=mesh,
         in_specs=(state_spec, state_spec, P(None, axes)),
         out_specs=(P(None, axes), P(None, axes), P(axes), P(axes), P(axes),
-                   P(axes)),
+                   P(axes), P(axes)),
         check_rep=False)
-    res_all, ebs_all, blocks_out, dropped, shipped, fills = fn(blocks, sim_b,
-                                                               events_b)
+    (res_all, ebs_all, blocks_out, dropped, shipped, fills,
+     loads) = fn(blocks, sim_b, events_b)
     dropped = jnp.sum(dropped, axis=0)                    # [n_intervals]
     shipped = jnp.sum(shipped, axis=0)
     fills = jnp.max(fills, axis=0)                        # [n_intervals]
 
-    # ---- reassemble final values in the original slot order -------------
+    # ---- carry out: reassemble the canonical block layout ---------------
     if layout == "shared_nothing":
-        vperm_out = blocks_out.reshape(n_dev, per + 1, Wp)[:, :per]
-        vperm_out = vperm_out.reshape(s_pad, Wp)
+        # the body's [per+1, Wp] outputs concatenate under P(axes) into
+        # exactly the carry layout — chunks chain with zero data movement
+        carry = blocks_out
     elif layout == "shared_per_socket":
         vperm_out = unchunk_output(blocks_out, eng.n_sockets, per)
-        vperm_out = vperm_out.reshape(s_pad, Wp)
+        nb = eng.n_sockets
+        carry = jnp.concatenate(
+            [vperm_out, jnp.zeros((nb, 1, Wp), vperm_out.dtype)],
+            axis=1).reshape(nb * (per + 1), Wp)
     else:  # shared_everything: chunks concatenate back to the full buffer
         vperm_out = unchunk_output(blocks_out, 1, s_pad).reshape(s_pad, Wp)
-    vperm_out = vperm_out[:, :W]
-    values_out = unpermute_values(
-        own, jnp.concatenate([vperm_out, jnp.zeros((1, W), vperm_out.dtype)]))
+        carry = jnp.concatenate(
+            [vperm_out, jnp.zeros((1, Wp), vperm_out.dtype)])
+
+    # ---- per-shard / per-slot access histogram (skew observability) -----
+    # loads: [n_dev, lpad+1] valid routed ops served per local slot
+    if layout == "shared_nothing":
+        l2 = loads.reshape(n_dev, per + 1)[:, :per]
+        shard_load = jnp.sum(l2, axis=1)                      # [n_dev]
+        slot_perm = l2.reshape(s_pad)
+    elif layout == "shared_per_socket":
+        l3 = jnp.sum(loads.reshape(eng.n_sockets, eng.n_core, per + 1),
+                     axis=1)[:, :per]
+        shard_load = jnp.sum(l3, axis=1)                      # [n_sockets]
+        slot_perm = l3.reshape(s_pad)
+    else:  # shared_everything: owner(slot) = slot % n_dev
+        slot_perm = jnp.sum(loads.reshape(n_dev, s_pad + 1), axis=0)[:s_pad]
+        shard_load = jax.ops.segment_sum(
+            slot_perm, jnp.arange(s_pad) % n_dev, num_segments=n_dev)
+    slot_load = jnp.take(slot_perm, own.fwd[:-1])             # original uids
+
     stats = dict(dropped=dropped, shipped=shipped, max_fill=fills,
                  capacity=jnp.int32(cap),
-                 exchanged_rows_per_device=jnp.int32(n_dev * cap))
-    return res_all, ebs_all, values_out, stats
+                 exchanged_rows_per_device=jnp.int32(n_dev * cap),
+                 shard_load=shard_load, slot_load=slot_load)
+    return res_all, ebs_all, carry, stats
+
+
+# ---------------------------------------------------------------------------
+# live migration: moved rows only, via the owner-routed all_to_all
+# ---------------------------------------------------------------------------
+def _migrate_impl(blocks, dstv, nidxv, *, eng: ShardedStream, cap: int):
+    """Move the block carry onto a new ownership (shared_nothing only).
+
+    ``dstv``/``nidxv`` come from :func:`ownership.migration_plan`: per
+    (device, block row) the new owner and the row's index in the new
+    owner's block.  ``cap`` is the exact max moved-rows count between any
+    device pair, so the exchange never drops (zero loss by construction).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    axes, n_dev, per = eng.axes, eng.n_dev, eng.own.per
+    body = partial(_migrate_body, axes=axes, n_dev=n_dev, per=per, cap=cap)
+    fn = shard_map(body, mesh=eng.mesh,
+                   in_specs=(P(axes), P(axes), P(axes)),
+                   out_specs=(P(axes), P(axes)), check_rep=False)
+    blocks, moved = fn(blocks, dstv, nidxv)
+    return blocks, jnp.sum(moved)
+
+
+def _migrate_body(block, dstv, nidxv, *, axes, n_dev, per, cap):
+    """Per-device migration: local stay-scatter + moved-rows exchange."""
+    dev = jax.lax.axis_index(axes[0])
+    dstv = dstv.reshape(per)
+    nidxv = nidxv.reshape(per)
+    rows = block[:per]
+    stay = dstv == dev
+    out = jnp.zeros_like(block)
+    # rows that stay scatter straight to their new index (dead padding
+    # rows carry nidx == per and land on the pad chain, zeroed below)
+    out = out.at[jnp.where(stay, nidxv, per)].set(
+        jnp.where(stay[:, None], rows, 0.0))
+    # moved rows bucket by new owner and ship with ONE all_to_all; cells
+    # beyond a pair's move count are ok=False -> value 0.0 at index per
+    dst = jnp.where(stay, n_dev, dstv).astype(jnp.int32)
+    plan = bucket_by_owner(dst, n_dev, cap)
+    srows = route_gather(plan, rows, 0.0)                 # [n_dev, cap, Wp]
+    sidx = route_gather(plan, nidxv, per)                 # [n_dev, cap]
+    rrows = jax.lax.all_to_all(srows, axes, split_axis=0, concat_axis=0)
+    ridx = jax.lax.all_to_all(sidx, axes, split_axis=0, concat_axis=0)
+    out = out.at[ridx.reshape(-1)].set(rrows.reshape(-1, rrows.shape[-1]))
+    out = out.at[per].set(0.0)
+    moved = jnp.sum(plan.ok.astype(jnp.int32))
+    return out, moved[None]
 
 
 def _stream_body(blocks, sim_b, events_loc, *, eng: ShardedStream, dims,
@@ -506,6 +685,14 @@ def _stream_body(blocks, sim_b, events_loc, *, eng: ShardedStream, dims,
     dropped = plans.dropped[None]
     shipped = jnp.sum(plans.ok.astype(jnp.int32), axis=(1, 2))[None]
     fills = plans.fill[None]
+    # per-local-slot access histogram over the whole chunk — the skew
+    # signal the controller's reshard knob feeds on ([1, lpad+1] rows
+    # concatenate to [n_dev, lpad+1]); each valid routed op is counted on
+    # exactly one device (per_socket: the core-residue filter above)
+    loads = jax.ops.segment_sum(
+        rvalid.astype(jnp.int32).reshape(-1),
+        jnp.minimum(ruid, lpad).reshape(-1),
+        num_segments=lpad + 1)[None]
 
     # Every out_spec must mention every mesh axis: an under-specified
     # output (value replicated across an unmentioned axis) is treated as
@@ -520,7 +707,7 @@ def _stream_body(blocks, sim_b, events_loc, *, eng: ShardedStream, dims,
     # res/ebs leave the shard_map event-sharded; post-processing runs in
     # the enclosing jit so its reductions compile in the same (fusion)
     # context as the single-device driver and stay bit-identical to it
-    return res_loc, ebs_all, vals_fin, dropped, shipped, fills
+    return res_loc, ebs_all, vals_fin, dropped, shipped, fills, loads
 
 
 # ---------------------------------------------------------------------------

@@ -3,5 +3,4 @@ from .faults import (Fault, FaultPlane, HangAborted, InjectedCrashError,
                      random_schedule, schedule_from_json, schedule_to_json)
 from .ft import TrainLoop, TrainLoopConfig
 from .service import (ExecutorHungError, ServiceConfig, ServiceRun,
-                      StreamService)
-from .straggler import StragglerPolicy, ShardDispatcher
+                      StragglerPolicy, StreamService)

@@ -41,29 +41,39 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-KNOBS = ("slack", "scheme", "chunk", "rung")
+KNOBS = ("slack", "scheme", "chunk", "rung", "reshard")
+
+
+def norm_owners(owners) -> Tuple[Tuple[int, int], ...]:
+    """Canonical ownership-override form: sorted tuple of (uid, owner)."""
+    return tuple(sorted((int(u), int(o)) for u, o in owners))
 
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
     """One point of the plan lattice.  ``scheme``/``rung`` name the
     engine variant (construction values = the base ``_fused`` program),
-    ``slack`` the sharded exchange slack (0.0 on single-device), and
-    ``chunk`` the service chunk size K in intervals."""
+    ``slack`` the sharded exchange slack (0.0 on single-device),
+    ``chunk`` the service chunk size K in intervals, and ``owners`` the
+    ownership-placement overrides the ``reshard`` knob migrates onto
+    (() = pure round-robin striping)."""
 
     scheme: str
     rung: str
     slack: float
     chunk: int
+    owners: Tuple[Tuple[int, int], ...] = ()
 
     def as_dict(self) -> Dict:
         return dict(scheme=self.scheme, rung=self.rung, slack=self.slack,
-                    chunk=self.chunk)
+                    chunk=self.chunk,
+                    owners=[[int(u), int(o)] for u, o in self.owners])
 
     @staticmethod
     def from_dict(d: Dict) -> "Plan":
         return Plan(scheme=str(d["scheme"]), rung=str(d["rung"]),
-                    slack=float(d["slack"]), chunk=int(d["chunk"]))
+                    slack=float(d["slack"]), chunk=int(d["chunk"]),
+                    owners=norm_owners(d.get("owners", ())))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,9 +109,23 @@ class ControllerConfig:
     rung_ladder: Tuple[str, ...] = ()  # () disables; [0]=calm, [-1]=storm
     rung_chain_frac: float = 0.0       # chain dominance that steps up
 
+    # elastic resharding (sharded shared_nothing lattice): migrate hot
+    # slots when max/mean shard load sustains above the threshold
+    reshard_imbalance: float = 0.0  # <=1.0 disables the knob
+    reshard_max_moves: int = 16     # hot uids migrated per decision
+
     # timing tier master switch.  The service forces this False whenever
     # snapshots are on: wall latencies are not replayable signals.
     allow_timing: bool = False
+
+
+def _shard_imbalance(r: Dict) -> float:
+    """max/mean of one record's per-shard load (1.0 = perfectly flat)."""
+    xs = r.get("x_shard") or ()
+    total = sum(xs)
+    if not xs or total <= 0:
+        return 1.0
+    return max(xs) * len(xs) / total
 
 
 def _chain_frac(r: Dict) -> float:
@@ -139,7 +163,8 @@ def _ladder_step(ladder: Sequence, cur, up: bool):
 def decide(cfg: ControllerConfig, plan: Plan, window: Sequence[Dict],
            g: int, last_switch: Dict[str, int], *, init_plan: Plan,
            sharded: bool, esc_done: int, snap_align: int,
-           queue_cap: int) -> List[Dict]:
+           queue_cap: int, n_owners: int = 0,
+           n_slots: int = 0) -> List[Dict]:
     """The decision function: pure in every argument.
 
     ``window`` is the chunk-record window (oldest first) visible at
@@ -231,12 +256,42 @@ def decide(cfg: ControllerConfig, plan: Plan, window: Sequence[Dict],
                 emit("rung", plan.rung, want,
                      "chain-dominance" if hot else "calm")
 
+    # -- reshard: skew-aware placement from the window's load histogram ----
+    # Pure over the record window (per-shard totals + the top-M hot-slot
+    # counts the service records per chunk), so replay after a restore
+    # recomputes the SAME placement from the same records.
+    if (sharded and cfg.reshard_imbalance > 1.0 and ready("reshard")
+            and n_owners > 1 and n_slots > 0):
+        xw = [r for r in w if r.get("x_shard")]
+        sx = xw[-cfg.sustain:] if len(xw) >= cfg.sustain else None
+        if sx and all(_shard_imbalance(r) >= cfg.reshard_imbalance
+                      for r in sx):
+            from repro.core.ownership import rebalance_ownership
+            shard = [0] * n_owners
+            hot_acc: Dict[int, int] = {}
+            for r in xw:
+                for i, v in enumerate(r["x_shard"]):
+                    shard[i] += int(v)
+                for u, c in r.get("hot", ()):
+                    hot_acc[int(u)] = hot_acc.get(int(u), 0) + int(c)
+            new = rebalance_ownership(
+                n_slots, n_owners, plan.owners, shard,
+                list(hot_acc.items()), max_moves=cfg.reshard_max_moves)
+            if new != norm_owners(plan.owners):
+                emit("reshard",
+                     [[int(u), int(o)] for u, o in plan.owners],
+                     [[int(u), int(o)] for u, o in new],
+                     f"imbalance-{_shard_imbalance(sx[-1]):.2f}x")
+
     return decisions
 
 
 def apply_decision(plan: Plan, d: Dict) -> Plan:
-    """Fold one decision into a plan (knob names == Plan field names)."""
+    """Fold one decision into a plan (knob names == Plan field names,
+    except ``reshard`` which sets the ``owners`` placement)."""
     assert d["knob"] in KNOBS, d
+    if d["knob"] == "reshard":
+        return dataclasses.replace(plan, owners=norm_owners(d["new"]))
     return dataclasses.replace(plan, **{d["knob"]: d["new"]})
 
 
@@ -256,13 +311,16 @@ class PlanController:
     happens on the service's main thread."""
 
     def __init__(self, cfg: ControllerConfig, init_plan: Plan, *,
-                 sharded: bool, snap_align: int, queue_cap: int):
+                 sharded: bool, snap_align: int, queue_cap: int,
+                 n_owners: int = 0, n_slots: int = 0):
         self.cfg = cfg
         self.init_plan = init_plan
         self.plan = init_plan
         self.sharded = bool(sharded)
         self.snap_align = int(snap_align)
         self.queue_cap = int(queue_cap)
+        self.n_owners = int(n_owners)   # 0 disables the reshard knob
+        self.n_slots = int(n_slots)
         self.trace: List[Dict] = []
         self.last_switch: Dict[str, int] = {}
         self.esc_done = 0
@@ -294,7 +352,8 @@ class PlanController:
             self.cfg, self.plan, window, g, self.last_switch,
             init_plan=self.init_plan, sharded=self.sharded,
             esc_done=self.esc_done, snap_align=self.snap_align,
-            queue_cap=self.queue_cap)
+            queue_cap=self.queue_cap, n_owners=self.n_owners,
+            n_slots=self.n_slots)
         for d in decisions:
             self._fold(d)
         return decisions

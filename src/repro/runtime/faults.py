@@ -46,8 +46,11 @@ EXECUTOR_CRASH = "executor.crash"
 EXECUTOR_HANG = "executor.hang"
 SNAPSHOT_PUBLISH = "snapshot.publish"
 CONTROLLER_DECIDE = "controller.decide"
+RESHARD_APPLY = "reshard.apply"
 
-#: every site -> the fault kinds that may act there
+#: every site -> the fault kinds that may act there.  New sites append
+#: LAST: random_schedule's draw order follows this dict, so inserting a
+#: site earlier would silently re-deal every pre-existing seed.
 SITE_KINDS: Dict[str, tuple] = {
     SOURCE_PULL: ("raise", "stall"),
     EXECUTOR_CRASH: ("crash",),
@@ -55,6 +58,7 @@ SITE_KINDS: Dict[str, tuple] = {
     SNAPSHOT_PUBLISH: ("torn_manifest", "corrupt_leaf", "truncate_leaf",
                        "debris"),
     CONTROLLER_DECIDE: ("crash",),
+    RESHARD_APPLY: ("crash",),
 }
 SITES = tuple(SITE_KINDS)
 
@@ -94,23 +98,25 @@ class Fault:
 
 def random_schedule(seed: int, *, n_pulls: int, n_chunks: int,
                     n_snapshots: int, n_decisions: int = 0,
-                    max_faults: int = 3, hang_s: float = 8.0,
+                    n_reshards: int = 0, max_faults: int = 3,
+                    hang_s: float = 8.0,
                     stall_s: float = 0.1) -> List[Fault]:
     """Deterministic schedule: a pure function of ``seed`` (and the site
     ranges).  At most one hang per schedule (a hang costs one watchdog
     timeout of wall clock); ``hang_s`` should exceed the watchdog timeout
     so an injected hang is always *detected*, never slept through.
     ``n_decisions`` opens the ``controller.decide`` site (adaptive runs
-    only); the default 0 keeps it closed, so pre-existing seeds yield
+    only) and ``n_reshards`` the ``reshard.apply`` site (elastic runs);
+    the defaults of 0 keep them closed, so pre-existing seeds yield
     byte-identical schedules."""
     rng = np.random.default_rng(np.random.SeedSequence([0xFA017, int(seed)]))
     n_faults = int(rng.integers(1, max_faults + 1))
     ranges = dict(zip(SITES, (n_pulls, n_chunks, n_chunks, n_snapshots,
-                              n_decisions)))
+                              n_decisions, n_reshards)))
     sites, weights = [], []
     for site, w in ((SOURCE_PULL, 0.35), (EXECUTOR_CRASH, 0.25),
                     (EXECUTOR_HANG, 0.15), (SNAPSHOT_PUBLISH, 0.25),
-                    (CONTROLLER_DECIDE, 0.2)):
+                    (CONTROLLER_DECIDE, 0.2), (RESHARD_APPLY, 0.2)):
         if ranges[site] > 0:
             sites.append(site)
             weights.append(w)
@@ -206,6 +212,19 @@ class FaultPlane:
         if f is not None:
             raise InjectedCrashError(
                 f"injected controller crash at decision boundary {f.at}")
+
+    def on_reshard_apply(self) -> None:
+        """Right after a live migration moved the state onto its new
+        placement and BEFORE the next chunk is dispatched — the worst
+        crash point for elastic resharding: the device layout changed but
+        no snapshot records the migrated run yet.  Recovery must land on
+        a *consistent* layout (the pre-migration snapshot's canonical
+        values re-enter under whatever ownership the replayed trace
+        folds to)."""
+        f = self._visit(RESHARD_APPLY)
+        if f is not None:
+            raise InjectedCrashError(
+                f"injected crash after reshard apply {f.at}")
 
 
 # ---------------------------------------------------------------------------

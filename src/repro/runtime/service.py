@@ -79,6 +79,21 @@ Adaptive control plane (DESIGN.md §2.9, ``runtime/controller.py``):
   exchange drop/fill, queue fill) — the controller's observation window,
   exposed as ``stats["chunks"]``.
 
+Elastic resharding (DESIGN.md §2.10):
+
+* On the sharded driver every chunk record also carries the per-shard
+  access histogram (``x_shard``) and the chunk's hottest slots
+  (``hot``).  With ``ControllerConfig.reshard_imbalance`` set, sustained
+  imbalance emits a ``reshard`` decision — a skew-aware ownership
+  permutation computed by greedy bin-packing over the observed load —
+  and the dispatch that first observes the new plan applies it as a
+  *live migration*: drain the pipe at the punctuation boundary, ship
+  only the rows whose owner changed through the owner-routed
+  ``all_to_all``, rebind the pre-jitted plan, resume.  Migrations are
+  traced decisions and snapshots store canonical uid-order values, so
+  crash → restore → replay across a migration stays bitwise identical;
+  the run's placement ledger lands in ``stats["placement"]``.
+
 ``StreamService.stats`` is the one merged accounting record: watermark
 drops, admission drops, sharded exchange overflow, the assembler ledger,
 source retry/backfill counters, fired faults, the chunk-record ring, the
@@ -106,9 +121,24 @@ from repro.core.intervals import IntervalAssembler, WatermarkPolicy
 
 from .controller import ControllerConfig, Plan, PlanController, replay_plan
 from .faults import FaultPlane, TransientSourceError
-from .straggler import StragglerPolicy
 
 log = logging.getLogger(__name__)
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerPolicy:
+    """"A shard is slow" has exactly one owner: this policy classifies a
+    slow *source pull* (``deadline_s``; misses + retries trip the
+    ``max_backfill_ratio`` alarm in ``stats["source"]``), and a slow
+    *device shard* — sustained load imbalance — is the controller's
+    ``reshard`` knob reading the same per-chunk records
+    (``runtime/controller.py``, DESIGN.md §2.10).  The old standalone
+    ``runtime/straggler.py`` dispatcher duplicated the deadline half of
+    this split and is gone."""
+
+    deadline_s: float = 1.0          # per-pull fetch budget
+    max_backfill_ratio: float = 0.2  # alarm threshold
+    backup_seed_offset: int = 1_000_003
 
 
 class ExecutorHungError(RuntimeError):
@@ -218,6 +248,11 @@ class ServiceRun:
     # chunk-record ring (per-chunk time series, newest last)
     decisions: List[Dict] = dataclasses.field(default_factory=list)
     chunk_records: List[Dict] = dataclasses.field(default_factory=list)
+    # elastic resharding: one dict per applied live migration (boundary
+    # interval, rows moved, override count) and the per-shard observed
+    # event totals behind stats["placement"]
+    migrations: List[Dict] = dataclasses.field(default_factory=list)
+    shard_events: Optional[np.ndarray] = None
     admission_dropped: int = 0
     replayed_intervals: int = 0
     exchange_dropped: int = 0
@@ -297,7 +332,6 @@ class StreamService:
         rec = ServiceRun()
         self.last_run = rec
         init = eng.init_store.values if values is None else values
-        vals = jnp.array(init, copy=True)
         src = iter(source)
         state = dict(exhausted=False, to_skip=int(skip_intervals), err=None)
         g_next = int(skip_intervals)    # global index of next interval
@@ -307,6 +341,12 @@ class StreamService:
 
         # -- adaptive control plane (DESIGN.md §2.9) -----------------------
         ctl = self._make_controller(controller_state)
+        # the engine carry: canonical uid-order values enter the engine's
+        # native carry layout (ownership blocks on the sharded driver, the
+        # plain buffer on one device).  _make_controller already rebound
+        # any restored ownership, so the blocks are built on the layout
+        # the replayed trace folds to.
+        vals = eng.carry_in(jnp.array(init, copy=True))
         if ctl is not None:
             rec.decisions = ctl.trace       # live alias (monotone trace)
         # per-chunk record ring: the controller's observation window and
@@ -327,8 +367,10 @@ class StreamService:
         # the plan the engine is actually bound to (slack applied at
         # restore by _make_controller; scheme/rung rebind lazily at the
         # first dispatch that observes a different plan)
+        # slack AND ownership are already live at restore (applied by
+        # _make_controller), so the first dispatch must not re-apply them
         applied = dict(plan=None if ctl is None else dataclasses.replace(
-            ctl.init_plan, slack=ctl.plan.slack))
+            ctl.init_plan, slack=ctl.plan.slack, owners=ctl.plan.owners))
         # watchdog progress record: ``busy`` is True only while the
         # executor is actively processing (dispatch/commit/drain), ``t``
         # is bumped at every step forward, ``lat`` holds recent
@@ -437,6 +479,23 @@ class StreamService:
                 entry["x_fill"] = (int(np.max(st["max_fill"]))
                                    if np.size(st["max_fill"]) else 0)
                 entry["x_cap"] = int(st["capacity"])
+                sl = st.get("shard_load")
+                if sl is not None:
+                    # per-shard access histogram (state rows touched on
+                    # each ownership shard this chunk) — the controller's
+                    # skew signal, and the top hot slots its placement
+                    # input.  The stable argsort makes the hot list (and
+                    # therefore every reshard decision derived from it)
+                    # replay-exact.
+                    shard = np.asarray(sl, np.int64)
+                    entry["x_shard"] = [int(v) for v in shard]
+                    slot = np.asarray(st["slot_load"], np.int64)
+                    top = np.argsort(-slot, kind="stable")[:32]
+                    entry["hot"] = [[int(u), int(slot[u])]
+                                    for u in top if slot[u] > 0]
+                    if rec.shard_events is None:
+                        rec.shard_events = np.zeros(shard.size, np.int64)
+                    rec.shard_events = rec.shard_events + shard
             with rec_cv:
                 hist.append(entry)
                 chn["last_i"] = entry["i"]
@@ -455,9 +514,21 @@ class StreamService:
                     f"injected failure after interval {g0 + kk - 1}")
 
         def take_snapshot(step: int, emergency: bool = False):
-            host_vals = np.asarray(jax.device_get(vals))
+            # the carry leaves in canonical uid order (carry_out inverts
+            # the ownership-block layout), so a snapshot restores onto ANY
+            # placement — in particular onto the migrated layout the
+            # replayed decision trace folds to
+            host_vals = np.asarray(jax.device_get(eng.carry_out(vals)))
             extra = dict(intervals_done=step, punct_interval=interval,
                          emergency=emergency)
+            if eng._sharded is not None:
+                # the ownership the engine is bound to at this boundary ==
+                # replay_plan(init_plan, trace g < step).owners; recorded
+                # so operators (and tests) can see the layout a snapshot
+                # was cut on without replaying the trace
+                extra["ownership"] = dict(
+                    n_owners=int(eng._sharded.n_dev),
+                    overrides=[[int(u), int(o)] for (u, o) in eng.owners])
             if ctl is not None:
                 # decisions AT the boundary (g == step) race with this
                 # write on the main thread, so the manifest records the
@@ -501,6 +572,30 @@ class StreamService:
                         "controller: exchange slack %.2f -> %.2f at "
                         "punctuation boundary %d",
                         prev.slack, plan.slack, g_next)
+                if eng._sharded is not None and plan.owners != prev.owners:
+                    # live migration (DESIGN.md §2.10): drain the pipe so
+                    # the carry is exactly this punctuation boundary's
+                    # state, ship only the rows whose owner changed
+                    # through the owner-routed all_to_all, rebind the
+                    # pre-jitted plan to the new ownership and resume —
+                    # the stream never stops
+                    while in_flight:
+                        commit_oldest()
+                    vals_ok["safe"] = False
+                    t0m = time.monotonic()
+                    vals, moved = eng.apply_resharding(vals, plan.owners)
+                    vals_ok["safe"] = True
+                    progress["t"] = time.monotonic()
+                    rec.migrations.append(dict(
+                        g=g_next, moved=int(moved),
+                        overrides=len(plan.owners),
+                        apply_s=float(time.monotonic() - t0m)))
+                    log.warning(
+                        "controller: live migration at punctuation "
+                        "boundary %d (%d rows moved, %d overrides)",
+                        g_next, int(moved), len(plan.owners))
+                    if faults is not None:
+                        faults.on_reshard_apply()
                 if eng._sharded is None:
                     variant = eng.ensure_variant(
                         scheme=plan.scheme, restructure_method=plan.rung)
@@ -511,8 +606,8 @@ class StreamService:
                             prev.scheme, prev.rung, plan.scheme, plan.rung,
                             g_next)
                 applied["plan"] = plan
-            shape = (variant,
-                     None if plan is None else plan.slack, kk)
+            shape = (variant, None if plan is None else plan.slack,
+                     None if plan is None else plan.owners, kk)
             if shape not in seen_shapes:
                 # first dispatch of this (variant, slack, K) compiles a
                 # new program: drop the warm-chunk latency window so the
@@ -746,7 +841,7 @@ class StreamService:
                          hung_thread=hung_thread)
             raise err
 
-        rec.final_values = np.asarray(jax.device_get(vals))
+        rec.final_values = np.asarray(jax.device_get(eng.carry_out(vals)))
         self._finish(rec, asm, ready, crashed=False, stranded=stranded,
                      source=srcst, plane=faults, chunks=list(hist),
                      controller=ctl)
@@ -790,26 +885,41 @@ class StreamService:
         init_plan = Plan(
             scheme=eng.cfg.scheme, rung=eng.cfg.restructure_method,
             slack=(eng._sharded.exchange_slack if sharded else 0.0),
-            chunk=cfg.chunk_intervals)
+            chunk=cfg.chunk_intervals, owners=eng.owners)
         if controller_state and controller_state.get("init_plan"):
             stored = Plan.from_dict(controller_state["init_plan"])
             # scheme/rung/chunk come from the engine/service config and
-            # must match (config mismatch is a caller error); slack may
-            # differ when the same engine object already escalated —
-            # the stored value is the original run's ground truth
+            # must match (config mismatch is a caller error); slack and
+            # ownership may differ when the same engine object already
+            # escalated or migrated — the stored value is the original
+            # run's ground truth
             assert (stored.scheme, stored.rung, stored.chunk) == \
                 (init_plan.scheme, init_plan.rung, init_plan.chunk), \
                 ("snapshot's adaptive run started from plan "
                  f"{stored.as_dict()}, this service is configured for "
                  f"{init_plan.as_dict()}")
             init_plan = stored
-        ctl = PlanController(ctl_cfg, init_plan, sharded=sharded,
-                             snap_align=cfg.snapshot_every,
-                             queue_cap=cfg.queue_intervals)
+        ctl = PlanController(
+            ctl_cfg, init_plan, sharded=sharded,
+            snap_align=cfg.snapshot_every, queue_cap=cfg.queue_intervals,
+            # the reshard knob only opens on an engine that can actually
+            # migrate (shared_nothing, >1 device, index routing)
+            n_owners=(eng._sharded.n_dev if eng.reshardable else 0),
+            n_slots=(eng.init_store.n_slots if eng.reshardable else 0))
         if controller_state:
+            # pre-elastic manifests recorded plans without an "owners"
+            # key; round-tripping through Plan normalizes the dict so the
+            # restore check compares like with like
+            plan_check = controller_state.get("plan")
+            if plan_check is not None:
+                plan_check = Plan.from_dict(plan_check).as_dict()
             ctl.restore(controller_state.get("trace", ()),
-                        plan_check=controller_state.get("plan"))
+                        plan_check=plan_check)
         if sharded:
+            # re-enter the restored layout: the snapshot's canonical
+            # uid-order values are loaded by run() AFTER this rebind, so
+            # they enter under the ownership the replayed trace folds to
+            eng.rebind_ownership(ctl.plan.owners)
             if ctl.plan.slack != eng._sharded.exchange_slack:
                 eng._sharded.set_exchange_slack(ctl.plan.slack)
         else:
@@ -921,6 +1031,20 @@ class StreamService:
                 escalations=(controller.esc_done
                              if controller is not None else 0),
                 slack=self.engine._sharded.exchange_slack)
+            # skew-aware placement ledger: observed load per ownership
+            # shard over the whole run, its imbalance ratio (max/mean),
+            # and every live migration the controller applied
+            sh = rec.shard_events
+            tot = int(sh.sum()) if sh is not None else 0
+            rec.stats["placement"] = dict(
+                shard_events=([int(v) for v in sh]
+                              if sh is not None else []),
+                imbalance=(float(int(sh.max()) * sh.size / tot)
+                           if tot else 1.0),
+                migrations=[dict(m) for m in rec.migrations],
+                moved_rows=int(sum(m["moved"] for m in rec.migrations)),
+                owners=[[int(u), int(o)]
+                        for (u, o) in self.engine.owners])
         if not crashed:
             self._log_once(rec.stats)
 

@@ -33,7 +33,7 @@ from repro.core.intervals import ReplaySource, WatermarkPolicy  # noqa: E402
 from repro.core.scheduler import DualModeEngine, EngineConfig   # noqa: E402
 from repro.runtime.faults import FaultPlane, random_schedule    # noqa: E402
 from repro.runtime.service import ServiceConfig, StreamService  # noqa: E402
-from repro.runtime.straggler import StragglerPolicy             # noqa: E402
+from repro.runtime.service import StragglerPolicy              # noqa: E402
 
 MESH = jax.make_mesh((8,), ("dev",))
 INTERVAL = 32

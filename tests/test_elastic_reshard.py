@@ -1,54 +1,328 @@
-"""Elastic restart: a checkpoint written under one mesh restores onto a
-different mesh (reshard), bitwise-equal values.  Runs in a subprocess with
-8 placeholder devices (pytest itself stays on the real single device)."""
+"""Elastic resharding: skew-aware placement + live state migration
+(DESIGN.md §2.10).
+
+Unit layer (single device, in-process): the ownership permutation with
+overrides, the greedy skew-aware rebalancer, the exact migration plan,
+the skew-storm key aligner, and the controller's ``reshard`` knob
+(trigger, cooldown, trace replay, plan serialization).
+
+Engine layer (subprocess, 8 forced host devices —
+tests/reshard_worker.py): live migration mid-stream on all four apps
+across tstream/mvlk stays bitwise identical to the never-migrated
+single-device monolithic run, and an injected ``reshard.apply`` crash
+recovers onto a consistent layout.
+"""
+import json
 import os
 import subprocess
 import sys
 
-WORKER = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import sys
-sys.path.insert(0, "src")
-import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
-from repro.ckpt import save_checkpoint, load_checkpoint
+import numpy as np
+import pytest
 
-tree = dict(
-    w=jnp.arange(float(16 * 8)).reshape(16, 8),
-    moe=dict(e=jnp.arange(float(8 * 4 * 2)).reshape(8, 4, 2)),
-)
-mesh_a = jax.make_mesh((2, 4), ("data", "model"))
-place_a = dict(
-    w=jax.device_put(tree["w"], NamedSharding(mesh_a, P("data", "model"))),
-    moe=dict(e=jax.device_put(tree["moe"]["e"],
-                              NamedSharding(mesh_a, P(("data", "model"),
-                                                      None, None)))),
-)
-save_checkpoint("/tmp/elastic_ckpt", 1, place_a)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-# "failure": restore onto a different topology (4x2) and a shrunken (1x8)
-for shape, axes in [((4, 2), ("data", "model")), ((1, 8), ("data", "model"))]:
-    mesh_b = jax.make_mesh(shape, axes)
-    shardings = dict(
-        w=NamedSharding(mesh_b, P("data", "model")),
-        moe=dict(e=NamedSharding(mesh_b, P(("data", "model"), None, None))),
-    )
-    restored = load_checkpoint("/tmp/elastic_ckpt", 1,
-                               jax.eval_shape(lambda: tree), shardings)
-    np.testing.assert_array_equal(np.asarray(restored["w"]),
-                                  np.asarray(tree["w"]))
-    np.testing.assert_array_equal(np.asarray(restored["moe"]["e"]),
-                                  np.asarray(tree["moe"]["e"]))
-    assert restored["w"].sharding.mesh.shape == dict(zip(axes, shape))
-print("ELASTIC_OK")
-"""
+from repro.apps.common import align_keys                        # noqa: E402
+from repro.core.ownership import (build_ownership,              # noqa: E402
+                                  migration_plan, owner_of_uids,
+                                  rebalance_ownership)
+from repro.core.types import make_store                         # noqa: E402
+from repro.runtime.controller import (ControllerConfig, Plan,   # noqa: E402
+                                      PlanController, norm_owners,
+                                      replay_plan)
+
+# ---------------------------------------------------------------------------
+# 1. ownership permutation with overrides
+# ---------------------------------------------------------------------------
 
 
-def test_reshard_across_meshes(tmp_path):
-    script = tmp_path / "elastic_worker.py"
-    script.write_text(WORKER)
-    proc = subprocess.run([sys.executable, str(script)], cwd=os.getcwd(),
-                          capture_output=True, text=True, timeout=600)
+def test_build_ownership_striping_closed_form():
+    """Empty overrides reproduce the pre-elastic closed form bit-exactly:
+    owner-major uid-ascending == (uid % n) * per + uid // n."""
+    for n_slots, n_owners in [(12, 4), (13, 4), (100, 8), (7, 1)]:
+        store = make_store([n_slots], 4)
+        own = build_ownership(store, n_owners)
+        uid = np.arange(n_slots, dtype=np.int64)
+        closed = (uid % n_owners) * own.per + uid // n_owners
+        np.testing.assert_array_equal(np.asarray(own.fwd)[:-1], closed)
+        assert int(np.asarray(own.fwd)[-1]) == own.s_pad
+        assert own.overrides == ()
+
+
+def test_build_ownership_overrides_layout():
+    """With overrides every uid lands inside its owner's bin, the map
+    stays a bijection, and bins stay uid-ascending."""
+    store = make_store([16], 4)
+    overrides = ((0, 3), (3, 0))    # a swap: sizes preserved
+    own = build_ownership(store, 4, overrides)
+    assert own.overrides == norm_owners(overrides)
+    fwd = np.asarray(own.fwd)[:-1]
+    assert sorted(fwd.tolist()) == sorted(set(fwd.tolist()))
+    owner = owner_of_uids(16, 4, overrides)
+    np.testing.assert_array_equal(fwd // own.per, owner)
+    for o in range(4):
+        uids = np.flatnonzero(owner == o)
+        ranks = fwd[uids] % own.per
+        np.testing.assert_array_equal(np.sort(ranks), np.arange(len(uids)))
+        np.testing.assert_array_equal(uids[np.argsort(ranks)],
+                                      np.sort(uids))
+
+
+def test_build_ownership_rejects_bin_overflow():
+    store = make_store([8], 4)
+    with pytest.raises(AssertionError):
+        build_ownership(store, 4, ((1, 0), (2, 0), (3, 0)))  # bin 0: 5 > 2
+
+
+# ---------------------------------------------------------------------------
+# 2. greedy skew-aware rebalance
+# ---------------------------------------------------------------------------
+
+
+def test_rebalance_moves_hot_and_preserves_bin_sizes():
+    n_slots, n_owners = 64, 4
+    # everything hot lives on shard 0 (uids 0, 4, 8, ...)
+    load = np.array([1000, 10, 10, 10], np.int64)
+    hot = [(0, 400), (4, 300), (8, 200)]
+    new = rebalance_ownership(n_slots, n_owners, (), load, hot)
+    assert new, "no overrides produced for a skewed histogram"
+    owner = owner_of_uids(n_slots, n_owners, new)
+    counts = np.bincount(owner, minlength=n_owners)
+    np.testing.assert_array_equal(
+        counts, np.bincount(owner_of_uids(n_slots, n_owners, ()),
+                            minlength=n_owners))
+    moved = dict(new)
+    assert any(moved.get(u, u % n_owners) != u % n_owners for u, _ in hot)
+
+
+def test_rebalance_deterministic_and_pure():
+    load = np.array([900, 30, 20, 10], np.int64)
+    hot = [(8, 500), (0, 300), (4, 100)]
+    a = rebalance_ownership(64, 4, (), load, hot)
+    b = rebalance_ownership(64, 4, (), load, list(hot))
+    assert a == b
+    # shuffling the hot list does not change the outcome (sorted inside)
+    c = rebalance_ownership(64, 4, (), load, hot[::-1])
+    assert a == c
+
+
+def test_rebalance_flat_histogram_is_noop():
+    load = np.array([100, 100, 100, 100], np.int64)
+    assert rebalance_ownership(64, 4, (), load, [(0, 5)]) == ()
+
+
+# ---------------------------------------------------------------------------
+# 3. migration plan exactness
+# ---------------------------------------------------------------------------
+
+
+def test_migration_plan_scatter_semantics():
+    """Applying (dst, nidx) as a scatter reproduces exactly the new
+    permuted layout from the old one — zero rows dropped or duplicated."""
+    n_slots, n_owners = 24, 4
+    store = make_store([n_slots], 2)
+    old = build_ownership(store, n_owners)
+    load = np.array([800, 5, 5, 5], np.int64)
+    hot = [(0, 300), (4, 250), (8, 150)]
+    new = build_ownership(store, n_owners,
+                          rebalance_ownership(n_slots, n_owners, (),
+                                              load, hot))
+    dst, nidx, cap = migration_plan(old, new)
+    per = old.per
+    vals = np.arange(n_slots, dtype=np.float64)        # uid as payload
+    vo = np.zeros(n_owners * per)
+    vo[np.asarray(old.fwd)[:-1]] = vals                # old permuted layout
+    sim = np.zeros(n_owners * per)
+    for d in range(n_owners):
+        for r in range(per):
+            if nidx[d, r] < per:
+                sim[dst[d, r] * per + nidx[d, r]] = vo[d * per + r]
+    want = np.zeros(n_owners * per)
+    want[np.asarray(new.fwd)[:-1]] = vals              # new permuted layout
+    np.testing.assert_array_equal(sim, want)
+    src = np.repeat(np.arange(n_owners), per).reshape(n_owners, per)
+    movers = (dst != src)
+    pair = src[movers] * n_owners + dst[movers]
+    assert cap == max(1, int(np.bincount(pair).max(initial=0)))
+
+
+def test_migration_plan_identity_when_unchanged():
+    store = make_store([16], 4)
+    own = build_ownership(store, 4)
+    dst, nidx, cap = migration_plan(own, own)
+    src = np.repeat(np.arange(4), own.per).reshape(4, own.per)
+    np.testing.assert_array_equal(dst, src)
+    assert cap == 1
+
+
+# ---------------------------------------------------------------------------
+# 4. skew-storm key alignment (workload side)
+# ---------------------------------------------------------------------------
+
+
+def test_align_keys_bijection_and_residue():
+    n_keys, mod = 1000, 8
+    keys = np.arange(n_keys, dtype=np.int32)
+    out = align_keys(keys, n_keys, mod)
+    assert sorted(out.tolist()) == keys.tolist()       # bijection
+    # the Zipf head (small key ids) lands on residue class 0 (mod 8):
+    # striping uid % n_dev then maps every hot key to one device
+    head = align_keys(np.arange(100, dtype=np.int32), n_keys, mod)
+    assert np.all(head % mod == 0)
+    assert np.array_equal(align_keys(keys, n_keys, 0), keys)
+
+
+# ---------------------------------------------------------------------------
+# 5. controller: the reshard knob
+# ---------------------------------------------------------------------------
+CTL = ControllerConfig(window=4, sustain=2, cooldown=4, slack_widen=False,
+                       reshard_imbalance=3.0, reshard_max_moves=8)
+
+
+def _skew_record(i, hot_shard=0, n=4, total=800):
+    x = [total // (n * 8)] * n
+    x[hot_shard] = total
+    return dict(i=i, x_shard=x,
+                hot=[[hot_shard + n * j, total // (j + 2)]
+                     for j in range(4)])
+
+
+def _flat_record(i, n=4):
+    return dict(i=i, x_shard=[100] * n, hot=[])
+
+
+def test_decide_reshard_trigger_and_cooldown():
+    ctl = PlanController(CTL, Plan("tstream", "auto", 8.0, 2), sharded=True,
+                         snap_align=0, queue_cap=16, n_owners=4, n_slots=64)
+    # flat window: no decision
+    assert ctl.step(4, [_flat_record(i) for i in range(3)]) == []
+    # sustained skew: reshard fires with old/new override lists
+    ds = ctl.step(6, [_skew_record(i) for i in range(4)])
+    assert [d["knob"] for d in ds] == ["reshard"]
+    assert ds[0]["old"] == [] and ds[0]["new"]
+    assert ctl.plan.owners == norm_owners(ds[0]["new"])
+    assert ds[0]["reason"].startswith("imbalance-")
+    # cooldown: the same skew does not re-fire inside `cooldown` intervals
+    assert ctl.step(8, [_skew_record(i) for i in range(4, 8)]) == []
+    # ... and after cooldown a *different* skew re-fires
+    ds2 = ctl.step(12, [_skew_record(i, hot_shard=2) for i in range(8, 12)])
+    assert [d["knob"] for d in ds2] == ["reshard"]
+    assert ds2[0]["old"] == ds[0]["new"]
+
+
+def test_decide_reshard_respects_gates():
+    # knob closed: n_owners=0 (engine not reshardable)
+    ctl = PlanController(CTL, Plan("tstream", "auto", 8.0, 2), sharded=True,
+                         snap_align=0, queue_cap=16)
+    assert ctl.step(6, [_skew_record(i) for i in range(4)]) == []
+    # knob closed: threshold disabled
+    ctl = PlanController(
+        ControllerConfig(window=4, sustain=2, slack_widen=False),
+        Plan("tstream", "auto", 8.0, 2), sharded=True,
+        snap_align=0, queue_cap=16, n_owners=4, n_slots=64)
+    assert ctl.step(6, [_skew_record(i) for i in range(4)]) == []
+    # not sustained: one skewed record among flat ones
+    ctl = PlanController(CTL, Plan("tstream", "auto", 8.0, 2), sharded=True,
+                         snap_align=0, queue_cap=16, n_owners=4, n_slots=64)
+    assert ctl.step(6, [_flat_record(0), _flat_record(1),
+                        _skew_record(2)]) == []
+
+
+def test_reshard_trace_replays():
+    ctl = PlanController(CTL, Plan("tstream", "auto", 8.0, 2), sharded=True,
+                         snap_align=0, queue_cap=16, n_owners=4, n_slots=64)
+    ctl.step(6, [_skew_record(i) for i in range(4)])
+    assert ctl.trace
+    folded = replay_plan(ctl.init_plan, ctl.trace)
+    assert folded == ctl.plan and folded.owners == ctl.plan.owners
+    # restore on a fresh controller reaches the same plan
+    ctl2 = PlanController(CTL, Plan("tstream", "auto", 8.0, 2), sharded=True,
+                          snap_align=0, queue_cap=16, n_owners=4, n_slots=64)
+    ctl2.restore([dict(d) for d in ctl.trace],
+                 plan_check=ctl.plan.as_dict())
+    assert ctl2.plan == ctl.plan
+
+
+def test_plan_owners_serialization():
+    assert norm_owners([[3, 1], [0, 2]]) == ((0, 2), (3, 1))
+    p = Plan("tstream", "auto", 8.0, 2, owners=norm_owners(((3, 1), (0, 2))))
+    d = p.as_dict()
+    assert d["owners"] == [[0, 2], [3, 1]]          # normalized (sorted)
+    assert Plan.from_dict(d) == p
+    # pre-elastic manifests have no "owners" key: default to striping
+    legacy = dict(scheme="tstream", rung="auto", slack=8.0, chunk=2)
+    assert Plan.from_dict(legacy).owners == ()
+    assert json.loads(json.dumps(d)) == d           # JSON-safe
+
+
+# ---------------------------------------------------------------------------
+# 6. single-device service: elastic config composes with crash -> replay
+#    (the reshard knob stays closed off the sharded driver)
+# ---------------------------------------------------------------------------
+
+
+def test_single_device_elastic_config_crash_replay(tmp_path):
+    import jax.numpy as jnp  # noqa: F401  (engine import below needs jax)
+    from repro.apps import ALL_APPS
+    from repro.core.intervals import PhasedReplaySource, WatermarkPolicy
+    from repro.core.scheduler import DualModeEngine, EngineConfig
+    from repro.runtime.service import ServiceConfig, StreamService
+
+    app = ALL_APPS["gs"]
+    store = app.make_store()
+    interval = 32
+
+    def mk_source():
+        return PhasedReplaySource(
+            app.gen_events,
+            [(4 * interval, {}),
+             (4 * interval, dict(theta=2.5, align_mod=8))],
+            seed=3, arrival_batch=23, jitter=4)
+
+    def mk_cfg(**kw):
+        return ServiceConfig(punct_interval=interval, chunk_intervals=2,
+                             watermark=WatermarkPolicy(allowed_lateness=4),
+                             controller=CTL, **kw)
+
+    eng = DualModeEngine(app, store, EngineConfig())
+    ref = StreamService(eng, mk_cfg()).run(mk_source())
+    assert ref.migrations == [] and "placement" not in ref.stats
+    assert all(d["knob"] != "reshard" for d in ref.decisions)
+
+    cfg = mk_cfg(snapshot_every=4, ckpt_dir=str(tmp_path))
+    svc = StreamService(eng, cfg)
+    with pytest.raises(RuntimeError):
+        svc.run(mk_source(), crash_after_interval=5)
+    rec = StreamService(eng, cfg).resume(mk_source())
+    np.testing.assert_array_equal(rec.final_values, ref.final_values)
+    snap = rec.stats["replayed"] // interval
+    for a, b in zip(rec.outputs, ref.outputs[snap:]):
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]),
+                                          np.asarray(b[k]))
+
+
+# ---------------------------------------------------------------------------
+# 7. engine layer: subprocess on 8 forced host devices
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def worker_verdicts():
+    worker = os.path.join(os.path.dirname(__file__), "reshard_worker.py")
+    proc = subprocess.run([sys.executable, worker], capture_output=True,
+                          text=True, timeout=1800)
     assert proc.returncode == 0, proc.stderr[-2000:]
-    assert "ELASTIC_OK" in proc.stdout
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.parametrize("case", [
+    "gs/tstream/migrate", "sl/tstream/migrate", "ob/tstream/migrate",
+    "tp/tstream/migrate", "gs/mvlk/migrate", "ob/mvlk/migrate",
+    "gs/tstream/crash",
+])
+def test_elastic_reshard_sharded(worker_verdicts, case):
+    v = worker_verdicts[case]
+    assert v["ok"], f"{case}: {v.get('why')}"
+    if case.endswith("/migrate"):
+        assert v["migrations"] >= 1 and v["moved"] > 0

@@ -44,14 +44,15 @@ from repro.core.intervals import ReplaySource, WatermarkPolicy
 from repro.core.scheduler import DualModeEngine, EngineConfig
 from repro.runtime.controller import ControllerConfig
 from repro.runtime.faults import (CONTROLLER_DECIDE, EXECUTOR_HANG,
-                                  SITE_KINDS, SNAPSHOT_PUBLISH, SOURCE_PULL,
+                                  RESHARD_APPLY, SITE_KINDS,
+                                  SNAPSHOT_PUBLISH, SOURCE_PULL,
                                   Fault, FaultPlane, InjectedCrashError,
                                   TransientSourceError, corrupt_snapshot,
                                   random_schedule, schedule_from_json,
                                   schedule_to_json)
 from repro.runtime.service import (ExecutorHungError, ServiceConfig,
                                    StreamService)
-from repro.runtime.straggler import StragglerPolicy
+from repro.runtime.service import StragglerPolicy
 
 from test_service import assert_outputs_identical, conservation_ok
 
@@ -158,14 +159,16 @@ def test_chaos_fires_every_site_across_sweep(tmp_path):
     sites = set()
     for seed in range(24):
         for f in random_schedule(seed, n_pulls=15, n_chunks=5,
-                                 n_snapshots=2, n_decisions=3):
+                                 n_snapshots=2, n_decisions=3,
+                                 n_reshards=3):
             sites.add(f.site)
     assert sites == set(SITE_KINDS), sites
-    # ... and with the controller site closed (the non-adaptive default)
-    # no pre-existing seed's schedule changes
+    # ... and with the controller + reshard sites closed (the
+    # non-adaptive default) no pre-existing seed's schedule changes
     for seed in range(16):
         sched = random_schedule(seed, n_pulls=15, n_chunks=5, n_snapshots=2)
-        assert all(f.site != CONTROLLER_DECIDE for f in sched)
+        assert all(f.site not in (CONTROLLER_DECIDE, RESHARD_APPLY)
+                   for f in sched)
 
 
 # ---------------------------------------------------------------------------

@@ -12,8 +12,8 @@ from repro.data import PipelineConfig, StreamingPipeline
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
                          compress_int8, decompress_int8, cosine_schedule,
                          wsd_schedule)
-from repro.runtime import ShardDispatcher, StragglerPolicy, TrainLoop, \
-    TrainLoopConfig
+from repro.runtime import StragglerPolicy, TrainLoop, TrainLoopConfig
+from repro.runtime.controller import _shard_imbalance
 
 
 def _tiny_setup(tmp):
@@ -70,21 +70,21 @@ def test_ckpt_reshard_roundtrip(tmp_path):
     assert restored["nested"]["b"].dtype == jnp.bfloat16
 
 
-def test_straggler_backfill():
-    clock = iter(np.arange(0, 100, 0.1)).__next__
-    disp = ShardDispatcher(4, StragglerPolicy(deadline_s=0.5), clock=clock)
-
-    def slow():
-        for _ in range(9):
-            clock()
-        return "slow-batch"
-
-    fetchers = {0: lambda: "ok0", 1: slow, 2: lambda: "ok2",
-                3: lambda: (_ for _ in ()).throw(TimeoutError())}
-    out = disp.dispatch(0, fetchers, backup=lambda s, sh: f"backup{sh}")
-    assert out[0] == "ok0" and out[2] == "ok2"
-    assert out[1] == "backup1" and out[3] == "backup3"
-    assert disp.backfilled[0] == 2
+def test_slow_shard_signal_path():
+    """"A shard is slow" has one owner now: StragglerPolicy classifies
+    slow source pulls (service deadline path) and the controller's
+    imbalance ratio classifies slow device shards — the old standalone
+    ShardDispatcher is gone."""
+    pol = StragglerPolicy(deadline_s=0.5, max_backfill_ratio=0.25)
+    assert pol.deadline_s == 0.5 and pol.max_backfill_ratio == 0.25
+    with pytest.raises(ImportError):
+        from repro.runtime import ShardDispatcher  # noqa: F401
+    # imbalance ratio = hottest shard / mean shard load
+    assert _shard_imbalance(dict(x_shard=[100, 100, 100, 100])) == 1.0
+    assert _shard_imbalance(dict(x_shard=[700, 100, 100, 100])) == \
+        pytest.approx(2.8)
+    assert _shard_imbalance(dict(x_shard=[])) == 1.0
+    assert _shard_imbalance(dict()) == 1.0
 
 
 def test_schedules_monotone_segments():
