@@ -1,6 +1,12 @@
 """Emit EXPERIMENTS.md tables from dry-run/bench JSONs.
 
   PYTHONPATH=src python -m benchmarks.report [--dir results/dryrun]
+
+With ``--trace trace.json`` (a Perfetto/Chrome-trace file written by a
+telemetry-enabled service run) it additionally prints the per-stage span
+summary table; ``--telemetry snapshot.json`` (a versioned registry
+snapshot, DESIGN.md §2.11) prints latency p50/p99 straight from the
+histogram registry.
 """
 from __future__ import annotations
 
@@ -55,10 +61,58 @@ def roofline_table_md(dryrun_dir: str) -> str:
     return "\n".join(lines)
 
 
+def trace_table_md(trace_path: str) -> str:
+    """Span durations by pipeline stage from a Perfetto trace — count,
+    total/mean wall time and p50/p99 per stage, sorted by total."""
+    from repro.runtime.telemetry import stage_summary
+    lines = ["| stage | spans | total ms | mean ms | p50 ms | p99 ms |",
+             "|---|---|---|---|---|---|"]
+    for r in stage_summary(trace_path):
+        lines.append(
+            f"| {r['stage']} | {r['count']} | {r['total_ms']:.2f} "
+            f"| {r['mean_ms']:.3f} | {r['p50_ms']:.3f} "
+            f"| {r['p99_ms']:.3f} |")
+    return "\n".join(lines)
+
+
+def telemetry_table_md(snapshot_path: str) -> str:
+    """Latency p50/p99 read from the histogram registry of a saved
+    telemetry snapshot (the versioned schema, not raw stats dicts)."""
+    from repro.runtime.telemetry import load_snapshot
+    from repro.runtime.telemetry import Histogram
+    snap = load_snapshot(snapshot_path)
+    lines = ["| histogram | n | mean ms | p50 ms | p99 ms | max ms |",
+             "|---|---|---|---|---|---|"]
+    for name, d in sorted(snap.get("histograms", {}).items()):
+        h = Histogram.from_dict(d)
+        if not h.count:
+            continue
+        lines.append(
+            f"| {name} | {h.count} | {h.mean_s * 1e3:.3f} "
+            f"| {h.percentile(50) * 1e3:.3f} "
+            f"| {h.percentile(99) * 1e3:.3f} | {h.vmax * 1e3:.3f} |")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--trace", default="",
+                    help="Perfetto trace from a telemetry-enabled run: "
+                         "print the per-stage span summary table")
+    ap.add_argument("--telemetry", default="",
+                    help="telemetry snapshot JSON: print histogram-registry "
+                         "p50/p99 table")
     args = ap.parse_args()
+    if args.trace:
+        print("## Pipeline stages (trace)\n")
+        print(trace_table_md(args.trace))
+    if args.telemetry:
+        print("\n## Latency histograms (registry)\n"
+              if args.trace else "## Latency histograms (registry)\n")
+        print(telemetry_table_md(args.telemetry))
+    if args.trace or args.telemetry:
+        return
     print("## Single-pod (16×16) dry-run\n")
     print(dryrun_table(args.dir, False))
     print("\n## Multi-pod (2×16×16) dry-run\n")

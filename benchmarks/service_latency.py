@@ -26,6 +26,27 @@ from repro.apps import ALL_APPS
 from repro.core.intervals import ReplaySource, WatermarkPolicy
 from repro.core.scheduler import DualModeEngine, EngineConfig
 from repro.runtime.service import ServiceConfig, StreamService
+from repro.runtime.telemetry import counter_value, histogram_from
+
+
+def _telemetry_row(rec):
+    """Latency percentiles + drop counters read from the run's telemetry
+    snapshot (DESIGN.md §2.11) — the schema is the source of truth; the
+    registry's deterministic log-bucketed histogram replaces re-deriving
+    percentiles from the raw per-event array."""
+    snap = rec.telemetry.snapshot()
+    h = histogram_from(snap, "latency.event_s")
+    return dict(
+        p50_latency_s=h.percentile(50), p99_latency_s=h.percentile(99),
+        late_rerouted=int(counter_value(snap, "service.late_rerouted")),
+        drops=dict(
+            watermark=int(counter_value(snap, "service.drops",
+                                        kind="watermark")),
+            admission=int(counter_value(snap, "service.drops",
+                                        kind="admission")),
+            exchange=int(counter_value(snap, "service.drops",
+                                       kind="exchange"))),
+        telemetry_schema=(snap["schema"], snap["schema_version"]))
 
 
 def _cases(quick: bool, smoke: bool):
@@ -80,16 +101,13 @@ def run(quick: bool = True, smoke: bool = False):
             if eps > best_eps:
                 best_rec, best_eps = rec, eps
             batch_best_s = min(batch_best_s, batch_once())
-        pct = best_rec.latency_percentiles((50, 99))
         batch_eps = n_events / batch_best_s
         rows.append(dict(
             fig="service", driver="service", app=app_name, scheme=scheme,
             interval=interval, n_events=n_events, chunk_intervals=chunk,
-            p50_latency_s=pct["p50"], p99_latency_s=pct["p99"],
             events_per_s=best_eps, batch_events_per_s=batch_eps,
             service_vs_batch=best_eps / batch_eps,
-            late_rerouted=best_rec.stats["late_rerouted"],
-            drops=best_rec.stats["drops"],
+            **_telemetry_row(best_rec),
         ))
     if not smoke:
         # the superseded modeled rows, side-by-side for comparison
@@ -190,11 +208,12 @@ def run_adaptive(quick: bool = True, smoke: bool = False):
                 if pname not in best or eps > best[pname][1]:
                     best[pname] = (rec, eps)
         for pname, (rec, eps) in best.items():
-            pct = rec.latency_percentiles((50, 99))
+            tr = _telemetry_row(rec)
             base = dict(fig="adaptive", scenario=name, app="gs",
                         scheme="tstream", interval=interval, plan=pname)
             row = dict(base, phase="all", n_events=n_events,
-                       p50_latency_s=pct["p50"], p99_latency_s=pct["p99"],
+                       p50_latency_s=tr["p50_latency_s"],
+                       p99_latency_s=tr["p99_latency_s"],
                        events_per_s=eps,
                        decisions=[dict(d) for d in rec.decisions],
                        final_chunk=(rec.stats["controller"]["plan"]["chunk"]

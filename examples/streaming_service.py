@@ -55,6 +55,17 @@ ap.add_argument("--storm", action="store_true",
                 help="multi-phase workload storm + adaptive control plane")
 ap.add_argument("--trace-out", default="",
                 help="write the controller decision trace as JSONL")
+ap.add_argument("--perfetto-out", default="",
+                help="write a Chrome-trace/Perfetto span trace of the "
+                     "pipeline (DESIGN.md §2.11) + a sibling "
+                     "<path>.telemetry.json registry snapshot; the trace "
+                     "is schema-validated after the run")
+ap.add_argument("--profile-dir", default="",
+                help="with --perfetto-out: jax.profiler per-chunk windows "
+                     "into this directory")
+ap.add_argument("--hlo-cost", action="store_true",
+                help="with --perfetto-out: annotate execute spans with "
+                     "compiled-HLO flops/bytes + roofline fractions")
 args = ap.parse_args()
 if args.devices:
     os.environ["XLA_FLAGS"] = (
@@ -70,6 +81,9 @@ from repro.core.scheduler import DualModeEngine, EngineConfig   # noqa: E402
 from repro.runtime.controller import ControllerConfig           # noqa: E402
 from repro.runtime.faults import corrupt_snapshot               # noqa: E402
 from repro.runtime.service import ServiceConfig, StreamService  # noqa: E402
+from repro.runtime.telemetry import (PIPELINE_STAGES, TelemetryConfig,
+                                     stage_summary,
+                                     validate_trace)            # noqa: E402
 
 
 def outputs_identical(a_list, b_list):
@@ -118,12 +132,35 @@ def main():
             controller=controller,
             watermark=WatermarkPolicy(allowed_lateness=args.jitter))
         # uninterrupted reference: no snapshots (and none left behind for
-        # the restart drill to accidentally resume from)
+        # the restart drill to accidentally resume from).  Tracing rides
+        # on the *reference* run, so the restart drill's bitwise assertion
+        # doubles as the replay-safety proof: a traced run reproduces the
+        # untraced recovery bit-for-bit (DESIGN.md §2.11).
+        tcfg = None
+        if args.perfetto_out:
+            tcfg = TelemetryConfig(trace_path=args.perfetto_out,
+                                   profile_dir=args.profile_dir,
+                                   hlo_attribution=args.hlo_cost)
         ref_cfg = ServiceConfig(
             punct_interval=iv, chunk_intervals=args.chunk,
-            controller=controller,
+            controller=controller, telemetry=tcfg,
             watermark=WatermarkPolicy(allowed_lateness=args.jitter))
         ref = StreamService(eng, ref_cfg).run(mk())
+        if args.perfetto_out:
+            snap_path = args.perfetto_out + ".telemetry.json"
+            ref.telemetry.dump(snap_path)
+            want = [s for s in PIPELINE_STAGES if s != "snapshot.publish"]
+            ok, why, info = validate_trace(args.perfetto_out,
+                                           require_stages=want)
+            assert ok, f"invalid Perfetto trace: {why}"
+            print(f"  perfetto trace -> {args.perfetto_out} "
+                  f"({info['n_events']} events, "
+                  f"stages: {', '.join(sorted(info['stages']))})")
+            print(f"  telemetry snapshot -> {snap_path}")
+            for r in stage_summary(args.perfetto_out):
+                print(f"    {r['stage']:<16s} x{r['count']:<4d} "
+                      f"mean {r['mean_ms']:8.3f} ms   "
+                      f"p99 {r['p99_ms']:8.3f} ms")
         pct = ref.latency_percentiles((50, 99))
         print(f"service: {len(ref.outputs)} intervals × {iv} "
               f"events on {args.devices or 1} device(s)")

@@ -24,6 +24,7 @@ global shape, so the single-host writer here is the degenerate case.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import re
@@ -75,39 +76,51 @@ def _fsync_dir(path: str) -> None:
         os.close(fd)
 
 
+def _span(tracer, name: str, **args):
+    """Telemetry span when a tracer is attached (DESIGN.md §2.11), a
+    no-op context otherwise — ckpt/ stays importable without the
+    runtime telemetry module."""
+    if tracer is None:
+        return contextlib.nullcontext()
+    return tracer.span(name, cat="ckpt", **args)
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree,
-                    extra_meta: Optional[dict] = None) -> str:
+                    extra_meta: Optional[dict] = None,
+                    tracer=None) -> str:
     out = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = out + ".tmp"
     os.makedirs(tmp, exist_ok=True)
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     manifest = dict(step=step, leaves={}, meta=extra_meta or {})
-    for path, leaf in leaves:
-        key = _path_str(path)
-        arr = np.asarray(jax.device_get(leaf))
-        dtype = str(arr.dtype)
-        if dtype == "bfloat16":  # numpy can't serialize ml_dtypes natively
-            arr = arr.view(np.uint16)
-        fname = re.sub(r"[^\w\-]", "_", key) + ".npy"
-        fpath = os.path.join(tmp, fname)
-        with open(fpath, "wb") as f:
-            np.save(f, arr)
+    with _span(tracer, "snapshot.write", step=step, leaves=len(leaves)):
+        for path, leaf in leaves:
+            key = _path_str(path)
+            arr = np.asarray(jax.device_get(leaf))
+            dtype = str(arr.dtype)
+            if dtype == "bfloat16":  # numpy can't serialize ml_dtypes natively
+                arr = arr.view(np.uint16)
+            fname = re.sub(r"[^\w\-]", "_", key) + ".npy"
+            fpath = os.path.join(tmp, fname)
+            with open(fpath, "wb") as f:
+                np.save(f, arr)
+                f.flush()
+                os.fsync(f.fileno())
+            manifest["leaves"][key] = dict(
+                file=fname, dtype=dtype, shape=list(arr.shape),
+                bytes=os.path.getsize(fpath), crc32=_crc32_file(fpath))
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
             f.flush()
             os.fsync(f.fileno())
-        manifest["leaves"][key] = dict(
-            file=fname, dtype=dtype, shape=list(arr.shape),
-            bytes=os.path.getsize(fpath), crc32=_crc32_file(fpath))
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-        f.flush()
-        os.fsync(f.fileno())
-    _fsync_dir(tmp)
+        _fsync_dir(tmp)
     # atomic publish: a crashed writer never yields a half checkpoint —
     # every byte is durable before the rename makes the step visible
-    if os.path.exists(out):
-        shutil.rmtree(out)
-    os.rename(tmp, out)
-    _fsync_dir(ckpt_dir)
+    with _span(tracer, "snapshot.rename", step=step):
+        if os.path.exists(out):
+            shutil.rmtree(out)
+        os.rename(tmp, out)
+        _fsync_dir(ckpt_dir)
     return out
 
 

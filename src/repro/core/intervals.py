@@ -188,6 +188,15 @@ class IntervalAssembler:
     def assert_conserved(self) -> None:
         assert self.conservation_ok(), self.ledger
 
+    def publish(self, tele, prefix: str = "assembly") -> None:
+        """Publish the conservation ledger into a telemetry registry as
+        ``<prefix>.<term>`` counters (DESIGN.md §2.11).  ``tele`` is
+        duck-typed (anything with ``count``) — the core layer defines
+        the hook, the runtime injects the registry, so no core module
+        ever imports ``repro.runtime``."""
+        for k, v in self.ledger.items():
+            tele.count(f"{prefix}.{k}", int(v))
+
 
 class ReplaySource:
     """Deterministic replayable arrival process.

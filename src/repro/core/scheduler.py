@@ -232,6 +232,24 @@ class DualModeEngine:
         """Materialize a chunk's per-interval outputs (blocks on D2H)."""
         return self._outs(res_all, ebs_all, n_intervals)
 
+    def chunk_lowered_text(self, values, batched, variant=None) -> str:
+        """Compiled (post-SPMD) HLO text for the chunk program that runs
+        these carry/batch shapes — the telemetry plane's opt-in cost
+        attribution hook (DESIGN.md §2.11).  Only shapes/dtypes are read
+        from ``values``/``batched``, never data, so it is safe to call
+        right before the donating dispatch.  This is a real AOT
+        lower+compile per shape (the jit call cache is separate), which
+        is why attribution defaults off."""
+        spec = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype),
+            (values, batched))
+        ts = jax.ShapeDtypeStruct((), jnp.int32)
+        if self._sharded is not None:
+            fn = self._sharded._impl
+        else:
+            fn = self._fused if variant is None else self._variants[variant]
+        return fn.lower(spec[0], spec[1], ts).compile().as_text()
+
     # -- elastic resharding / carry API (DESIGN.md §2.10) -----------------
     # The service's chunk loop threads an OPAQUE carry: canonical [S+1, W]
     # values on the single-device driver, the resident ownership-block

@@ -233,12 +233,24 @@ class ShardedStream:
         self.last_stats = stats
         total_dropped = int(np.sum(stats["dropped"]))
         if total_dropped:
-            log.warning(
+            # overflow accounting goes through the process-wide telemetry
+            # registry (DESIGN.md §2.11): counted always, logged as a
+            # rate-unlimited structured event with the exact legacy
+            # message.  Imported lazily so core never pulls the runtime
+            # package at module-import time (layering).
+            from repro.runtime.telemetry import get_default
+            tele = get_default()
+            tele.count("exchange.dropped", total_dropped,
+                       driver="run_stream")
+            tele.count("exchange.shipped", int(np.sum(stats["shipped"])),
+                       driver="run_stream")
+            tele.event(
+                "exchange.overflow",
                 "sharded exchange overflow: %d ops dropped across %d "
                 "intervals (capacity=%d/bucket, slack=%.2f); results "
                 "exclude dropped ops — raise exchange_slack",
                 total_dropped, n_intervals, stats["capacity"],
-                self.exchange_slack)
+                self.exchange_slack, logger=log, limit=-1)
         outs = jax.device_get(self._post(res_all, ebs_all))
         return ([jax.tree_util.tree_map(lambda x, i=i: x[i], outs)
                  for i in range(n_intervals)], values)

@@ -357,3 +357,50 @@ class PlanController:
         for d in decisions:
             self._fold(d)
         return decisions
+
+
+class AdvisoryTiming:
+    """The sanctioned timing→control bridge (DESIGN.md §2.11).
+
+    Snapshots force ``allow_timing`` off because wall latencies are not
+    replayable signals.  This shadow evaluates :func:`decide` with the
+    timing tier re-enabled — same plan, same window, same cool-down
+    state as the applied controller — and surfaces only the decisions
+    the deterministic tier did NOT make, tagged ``advisory=True``.
+    Hints are pure observability: the service logs and records them but
+    never folds them into the plan, never stores them in snapshots, and
+    never lets them touch the decision trace, so replay identity is
+    untouched.  A per-knob hint ledger applies the same ``cooldown`` so
+    a persistent timing signal hints once per cool-down window, not at
+    every boundary.
+    """
+
+    def __init__(self, ctl: PlanController):
+        self.ctl = ctl
+        self.cfg = dataclasses.replace(ctl.cfg, allow_timing=True)
+        self.last_hint: Dict[str, int] = {}
+        self.hints: List[Dict] = []
+
+    def step(self, g: int, window: Sequence[Dict],
+             applied: Sequence[Dict]) -> List[Dict]:
+        """Shadow-decide at boundary ``g`` AFTER the applied controller
+        stepped; returns the fresh hints (possibly empty)."""
+        last = dict(self.ctl.last_switch)
+        for knob, hg in self.last_hint.items():
+            last[knob] = max(hg, last.get(knob, hg))
+        shadow = decide(
+            self.cfg, self.ctl.plan, window, g, last,
+            init_plan=self.ctl.init_plan, sharded=self.ctl.sharded,
+            esc_done=self.ctl.esc_done, snap_align=self.ctl.snap_align,
+            queue_cap=self.ctl.queue_cap, n_owners=self.ctl.n_owners,
+            n_slots=self.ctl.n_slots)
+        applied_knobs = {d["knob"] for d in applied}
+        out: List[Dict] = []
+        for d in shadow:
+            if d["knob"] in applied_knobs:
+                continue        # the deterministic tier already moved it
+            hint = dict(d, advisory=True)
+            self.last_hint[d["knob"]] = int(g)
+            self.hints.append(hint)
+            out.append(hint)
+        return out

@@ -167,6 +167,20 @@ class FaultPlane:
         """Cut every in-progress injected stall/hang short (watchdog)."""
         self._abort.set()
 
+    def publish(self, tele) -> None:
+        """Mirror the injection ledger into a telemetry registry
+        (DESIGN.md §2.11): one structured record per fired fault plus a
+        per-site visit counter.  ``tele`` is duck-typed (anything with
+        ``ensure_records``/``record_doc``/``count``) so this layer never
+        imports the runtime telemetry module."""
+        tele.ensure_records("faults")
+        for f in self.fired:
+            tele.record_doc("faults", dict(f))
+        tele.count("faults.fired", len(self.fired))
+        for site, n in self.visits.items():
+            if n:
+                tele.count("faults.visits", n, site=site)
+
     def _visit(self, site: str) -> Optional[Fault]:
         i = self.visits[site]
         self.visits[site] = i + 1

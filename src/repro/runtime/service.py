@@ -99,6 +99,26 @@ drops, admission drops, sharded exchange overflow, the assembler ledger,
 source retry/backfill counters, fired faults, the chunk-record ring, the
 controller trace and any structured error land in a single dict; each
 category is logged at most once per run.
+
+Unified telemetry plane (DESIGN.md §2.11, ``runtime/telemetry.py``):
+
+* Every run owns a ``Telemetry`` registry (``run.telemetry``); ``stats``
+  is now a *view* rendered from the registry's versioned snapshot, and
+  the once-per-run log lines are rate-limited structured events (same
+  messages, same logger, no hand-rolled flags).
+* With ``ServiceConfig.telemetry.trace_path`` set, every pipeline stage
+  (source pull → assembly → admission → dispatch → execute → commit →
+  ``controller.decide`` → snapshot publish → ``reshard.apply``) emits a
+  Chrome-trace/Perfetto span; ``profile_dir`` adds per-chunk
+  ``jax.profiler`` windows and ``hlo_attribution`` attaches compiled-HLO
+  flops/bytes + roofline fractions to execute spans.
+* Replay-safety contract: telemetry never feeds ``decide()`` — a
+  tracing-enabled run is bitwise identical to a tracing-off run,
+  including crash → restore → replay (tests/test_telemetry.py).  The
+  only timing→control bridge is the *advisory* channel: when snapshots
+  force ``allow_timing`` off, a shadow controller still evaluates the
+  timing tier and its would-be decisions are logged + recorded under
+  ``stats["controller"]["advisory"]`` — never applied.
 """
 from __future__ import annotations
 
@@ -119,8 +139,12 @@ from repro.ckpt import (checkpoint_steps, load_checkpoint, prune_checkpoints,
                         verify_checkpoint)
 from repro.core.intervals import IntervalAssembler, WatermarkPolicy
 
-from .controller import ControllerConfig, Plan, PlanController, replay_plan
+from .controller import (AdvisoryTiming, ControllerConfig, Plan,
+                         PlanController, replay_plan)
 from .faults import FaultPlane, TransientSourceError
+from .telemetry import (ChunkProfiler, CostAttributor, Telemetry,
+                        TelemetryConfig, empty_stats, make_tracer,
+                        stats_view)
 
 log = logging.getLogger(__name__)
 
@@ -195,6 +219,8 @@ class ServiceConfig:
     # -- adaptive control plane (DESIGN.md §2.9) -----------------------
     controller: Optional[ControllerConfig] = None
     chunk_record_ring: int = 32     # per-chunk time series depth
+    # -- observability plane (DESIGN.md §2.11); None = metrics only ----
+    telemetry: Optional[TelemetryConfig] = None
 
     def __post_init__(self):
         assert self.punct_interval > 0
@@ -262,6 +288,10 @@ class ServiceRun:
     t_last_commit: Optional[float] = None
     final_values: Optional[np.ndarray] = None
     stats: Optional[Dict] = None
+    # the run's telemetry registry (DESIGN.md §2.11): counters, gauges,
+    # histograms and record logs behind the versioned schema; ``stats``
+    # is rendered from its snapshot by _finish
+    telemetry: Optional[Telemetry] = None
 
     def latency_s(self) -> np.ndarray:
         """Per-event end-to-end latency (enqueue -> interval commit)."""
@@ -331,6 +361,22 @@ class StreamService:
         in_flight = collections.deque()
         rec = ServiceRun()
         self.last_run = rec
+        # -- observability plane (DESIGN.md §2.11) ---------------------
+        # The registry is always on (no clocks of its own); the tracer,
+        # profiler and cost attributor are opt-in and provably off the
+        # replay path: with all three enabled the run stays bitwise
+        # identical to a bare one.
+        tcfg = cfg.telemetry
+        tele = Telemetry(record_cap=tcfg.record_cap if tcfg else 4096)
+        rec.telemetry = tele
+        tracer = make_tracer(tcfg, tele)
+        profiler = ChunkProfiler(tcfg.profile_dir if tcfg else "")
+        cost_attr = None
+        if tcfg is not None and tcfg.hlo_attribution:
+            cost_attr = CostAttributor(
+                n_devices=(eng._sharded.n_dev
+                           if eng._sharded is not None else 1))
+        costs: Dict = {}     # shape key -> analyze_hlo dict (or None)
         init = eng.init_store.values if values is None else values
         src = iter(source)
         state = dict(exhausted=False, to_skip=int(skip_intervals), err=None)
@@ -341,6 +387,13 @@ class StreamService:
 
         # -- adaptive control plane (DESIGN.md §2.9) -----------------------
         ctl = self._make_controller(controller_state)
+        # advisory timing channel (DESIGN.md §2.11): the user asked for
+        # the timing tier but snapshots forced it off — shadow-evaluate
+        # it anyway; hints are logged/recorded, never applied
+        advisory = None
+        if (ctl is not None and cfg.controller is not None
+                and cfg.snapshot_every and cfg.controller.allow_timing):
+            advisory = AdvisoryTiming(ctl)
         # the engine carry: canonical uid-order values enter the engine's
         # native carry layout (ownership blocks on the sharded driver, the
         # plain buffer on one device).  _make_controller already rebound
@@ -394,27 +447,30 @@ class StreamService:
             failures retry with exponential backoff (bounded by
             ``source_retries``), slow pulls count as deadline misses."""
             attempt = 0
-            while True:
-                t0 = time.monotonic()
-                try:
-                    if faults is not None:
-                        faults.on_source_pull()
-                    item = next(src)
-                except StopIteration:
-                    raise
-                except (TransientSourceError, TimeoutError):
-                    srcst["retries"] += 1
-                    if attempt >= cfg.source_retries:
+            with tracer.span("source.pull") as sp:
+                while True:
+                    t0 = time.monotonic()
+                    try:
+                        if faults is not None:
+                            faults.on_source_pull()
+                        item = next(src)
+                    except StopIteration:
                         raise
-                    delay = cfg.retry_backoff_s * (2.0 ** attempt)
-                    srcst["backoff_s"] += delay
-                    attempt += 1
-                    time.sleep(delay)
-                    continue
-                srcst["pulls"] += 1
-                if time.monotonic() - t0 > cfg.straggler.deadline_s:
-                    srcst["deadline_misses"] += 1
-                return item
+                    except (TransientSourceError, TimeoutError):
+                        srcst["retries"] += 1
+                        if attempt >= cfg.source_retries:
+                            raise
+                        delay = cfg.retry_backoff_s * (2.0 ** attempt)
+                        srcst["backoff_s"] += delay
+                        attempt += 1
+                        time.sleep(delay)
+                        continue
+                    srcst["pulls"] += 1
+                    if time.monotonic() - t0 > cfg.straggler.deadline_s:
+                        srcst["deadline_misses"] += 1
+                    if attempt:
+                        sp.set(retries=attempt)
+                    return item
 
         def pull_one() -> bool:
             """Admit one arrival batch; False = backpressure (queue full)."""
@@ -422,29 +478,48 @@ class StreamService:
                 return False
             if len(ready) >= cfg.queue_intervals and cfg.admission == "block":
                 return False
-            try:
-                ev, t = guarded_pull()
-            except StopIteration:
-                state["exhausted"] = True
-                asm.close()
-            else:
-                if len(ready) >= cfg.queue_intervals:   # admission == "drop"
-                    rec.admission_dropped += int(np.asarray(t).shape[0])
+            with tracer.span("admission", qfill=len(ready)) as adm:
+                try:
+                    ev, t = guarded_pull()
+                except StopIteration:
+                    state["exhausted"] = True
+                    asm.close()
+                    adm.set(outcome="exhausted")
                 else:
-                    now = time.perf_counter()
-                    if rec.t_first_enqueue is None:
-                        rec.t_first_enqueue = now
-                    asm.push(ev, t, enqueue_s=now)
-            drain_asm()
+                    if len(ready) >= cfg.queue_intervals:  # admission=="drop"
+                        n_drop = int(np.asarray(t).shape[0])
+                        rec.admission_dropped += n_drop
+                        adm.set(outcome="dropped", events=n_drop)
+                    else:
+                        now = time.perf_counter()
+                        if rec.t_first_enqueue is None:
+                            rec.t_first_enqueue = now
+                        asm.push(ev, t, enqueue_s=now)
+                        adm.set(outcome="admitted")
+            with tracer.span("assembly") as asp:
+                before = len(ready)
+                drain_asm()
+                asp.set(intervals=len(ready) - before)
             return True
 
         def commit_oldest(check_crash: bool = True):
             (g0, kk, res, ebs, infos, xst, item_plan, qfill,
-             t_disp) = in_flight.popleft()
+             t_disp, cost) = in_flight.popleft()
+            commit_span = tracer.span("chunk.commit", g0=g0, k=kk)
+            commit_span.__enter__()
             outs = eng.post_outputs(res, ebs, kk)
             t_commit = time.perf_counter()
             rec.t_last_commit = t_commit
             now = time.monotonic()
+            # the device-execute span: the dispatch->commit wall window,
+            # reconstructed from stamps the accounting already takes (no
+            # extra clock reads on the replay path); cost attribution
+            # and roofline fractions ride on its args
+            if tracer.enabled:
+                xargs = dict(g0=g0, k=kk)
+                if cost is not None and cost_attr is not None:
+                    xargs.update(cost_attr.annotate(cost, now - t_disp))
+                tracer.complete_at("chunk.execute", t_disp, now, **xargs)
             if progress["last_commit"] is not None:
                 progress["lat"].append(now - progress["last_commit"])
             progress["last_commit"] = now
@@ -508,12 +583,16 @@ class StreamService:
                 rec.commits.append(dict(
                     interval=g0 + i, commit_s=t_commit,
                     watermark=int(info.watermark), n_late=int(info.n_late)))
+            commit_span.__exit__(None, None, None)
             if check_crash and crash_after_interval is not None \
                     and g0 + kk - 1 >= crash_after_interval:
                 raise RuntimeError(
                     f"injected failure after interval {g0 + kk - 1}")
 
         def take_snapshot(step: int, emergency: bool = False):
+            snap_span = tracer.span("snapshot.publish", step=step,
+                                    emergency=emergency)
+            snap_span.__enter__()
             # the carry leaves in canonical uid order (carry_out inverts
             # the ownership-block layout), so a snapshot restores onto ANY
             # placement — in particular onto the migrated layout the
@@ -546,12 +625,14 @@ class StreamService:
                     chunks_done=chn["n"])
             path = save_checkpoint(
                 cfg.ckpt_dir, step, dict(values=host_vals),
-                extra_meta=extra)
+                extra_meta=extra,
+                tracer=(tracer if tracer.enabled else None))
             if faults is not None and not emergency:
                 faults.on_snapshot_publish(path)
             if cfg.keep_last:
                 prune_checkpoints(cfg.ckpt_dir, cfg.keep_last)
             rec.snapshots.append(step)
+            snap_span.__exit__(None, None, None)
 
         seen_shapes = set()     # (variant-key, chunk size) already compiled
 
@@ -568,10 +649,12 @@ class StreamService:
                     # (recompiles the sharded program; shipped results
                     # are unaffected)
                     eng._sharded.set_exchange_slack(plan.slack)
-                    log.warning(
+                    tele.event(
+                        "controller.slack_widen",
                         "controller: exchange slack %.2f -> %.2f at "
                         "punctuation boundary %d",
-                        prev.slack, plan.slack, g_next)
+                        prev.slack, plan.slack, g_next,
+                        logger=log, limit=-1)
                 if eng._sharded is not None and plan.owners != prev.owners:
                     # live migration (DESIGN.md §2.10): drain the pipe so
                     # the carry is exactly this punctuation boundary's
@@ -583,28 +666,34 @@ class StreamService:
                         commit_oldest()
                     vals_ok["safe"] = False
                     t0m = time.monotonic()
-                    vals, moved = eng.apply_resharding(vals, plan.owners)
+                    with tracer.span("reshard.apply", g=g_next,
+                                     overrides=len(plan.owners)) as rsp:
+                        vals, moved = eng.apply_resharding(vals, plan.owners)
+                        rsp.set(moved=int(moved))
                     vals_ok["safe"] = True
                     progress["t"] = time.monotonic()
                     rec.migrations.append(dict(
                         g=g_next, moved=int(moved),
                         overrides=len(plan.owners),
                         apply_s=float(time.monotonic() - t0m)))
-                    log.warning(
+                    tele.event(
+                        "controller.migration",
                         "controller: live migration at punctuation "
                         "boundary %d (%d rows moved, %d overrides)",
-                        g_next, int(moved), len(plan.owners))
+                        g_next, int(moved), len(plan.owners),
+                        logger=log, limit=-1)
                     if faults is not None:
                         faults.on_reshard_apply()
                 if eng._sharded is None:
                     variant = eng.ensure_variant(
                         scheme=plan.scheme, restructure_method=plan.rung)
                     if (plan.scheme, plan.rung) != (prev.scheme, prev.rung):
-                        log.warning(
+                        tele.event(
+                            "controller.variant_switch",
                             "controller: plan variant %s/%s -> %s/%s at "
                             "punctuation boundary %d",
                             prev.scheme, prev.rung, plan.scheme, plan.rung,
-                            g_next)
+                            g_next, logger=log, limit=-1)
                 applied["plan"] = plan
             shape = (variant, None if plan is None else plan.slack,
                      None if plan is None else plan.owners, kk)
@@ -615,16 +704,24 @@ class StreamService:
                 # the warm median — same reason grace covers chunk 0
                 seen_shapes.add(shape)
                 progress["lat"].clear()
+            if cost_attr is not None and shape not in costs:
+                # opt-in per-chunk-shape attribution: shapes/dtypes are
+                # read BEFORE the donating call; the AOT compile is the
+                # documented one-time cost per shape (DESIGN.md §2.11)
+                costs[shape] = cost_attr.chunk_cost(
+                    eng, vals, batched, variant=variant)
             vals_ok["safe"] = False     # the carry is being donated
             t_disp = time.monotonic()
-            res, ebs, new_vals, xst = eng.run_stream_chunk(
-                vals, batched, ts_base_for(g_next, interval),
-                variant=variant)
+            with tracer.span("chunk.dispatch", g0=g_next, k=kk):
+                with profiler.chunk(g_next):
+                    res, ebs, new_vals, xst = eng.run_stream_chunk(
+                        vals, batched, ts_base_for(g_next, interval),
+                        variant=variant)
             vals = new_vals
             vals_ok["safe"] = True
             progress["t"] = time.monotonic()
             in_flight.append((g_next, kk, res, ebs, infos, xst, plan,
-                              qfill, t_disp))
+                              qfill, t_disp, costs.get(shape)))
             g_next += kk
             if faults is not None:
                 faults.on_executor_chunk()
@@ -718,6 +815,7 @@ class StreamService:
 
         def submit(kk: int, plan):
             nonlocal executed
+            g0 = int(skip_intervals) + executed
             qfill = len(ready)      # deterministic backlog signal
             chunk = [ready.popleft() for _ in range(kk)]
             # count at pop time: a chunk stranded by a crash (in work_q,
@@ -725,8 +823,9 @@ class StreamService:
             # must land in the stats as unprocessed, not vanish
             executed += kk
             chn["j"] += 1
-            batched = {k: jnp.asarray(np.stack([c[0][k] for c in chunk]))
-                       for k in chunk[0][0]}
+            with tracer.span("chunk.submit", g0=g0, k=kk, qfill=qfill):
+                batched = {k: jnp.asarray(np.stack([c[0][k] for c in chunk]))
+                           for k in chunk[0][0]}
             item = (batched, kk, [c[1] for c in chunk], plan, qfill)
             while state["err"] is None:
                 try:
@@ -752,6 +851,7 @@ class StreamService:
                     rec_cv.wait(0.05)
             return state["err"] is None and chn["last_i"] >= need_i
 
+        profiler.start()
         try:
             while state["err"] is None:
                 # admission: a "drop" source never waits — one arrival
@@ -777,8 +877,23 @@ class StreamService:
                     if not wait_records(gj - 2):
                         break       # run already declared failed
                     window = [r for r in list(hist) if r["i"] <= gj - 2]
-                    decisions = ctl.step(int(skip_intervals) + executed,
-                                         window)
+                    with tracer.span("controller.decide", g=int(
+                            skip_intervals) + executed) as dsp:
+                        decisions = ctl.step(int(skip_intervals) + executed,
+                                             window)
+                        dsp.set(n=len(decisions))
+                    if advisory is not None:
+                        # shadow timing tier: hints are logged + recorded,
+                        # never applied — the replay path is untouched
+                        for h in advisory.step(int(skip_intervals) + executed,
+                                               window, decisions):
+                            tele.record_doc("advisory", dict(h))
+                            tele.event(
+                                "controller.advisory",
+                                "advisory (timing tier, NOT applied): "
+                                "%s %s -> %s at g=%d",
+                                h["knob"], h["old"], h["new"], h["g"],
+                                logger=log, level=logging.INFO, limit=8)
                     if decisions and faults is not None:
                         faults.on_controller_decide()
                     if ctl.plan.chunk != K:
@@ -798,6 +913,7 @@ class StreamService:
             if state["err"] is None:
                 state["err"] = e
         finally:
+            profiler.stop()
             if wd_thread is not None:
                 wd_stop.set()
                 wd_thread.join()
@@ -838,13 +954,15 @@ class StreamService:
             self._finish(rec, asm, ready, crashed=True, stranded=stranded,
                          source=srcst, error=err, plane=faults,
                          chunks=list(hist), controller=ctl,
-                         hung_thread=hung_thread)
+                         hung_thread=hung_thread, advisory=advisory)
+            tracer.close()
             raise err
 
         rec.final_values = np.asarray(jax.device_get(eng.carry_out(vals)))
         self._finish(rec, asm, ready, crashed=False, stranded=stranded,
                      source=srcst, plane=faults, chunks=list(hist),
-                     controller=ctl)
+                     controller=ctl, advisory=advisory)
+        tracer.close()
         return rec
 
     def _make_controller(self, controller_state: Optional[Dict]
@@ -974,102 +1092,142 @@ class StreamService:
 
     # ------------------------------------------------------------------
     @property
-    def stats(self) -> Optional[Dict]:
-        return self.last_run.stats if self.last_run else None
+    def stats(self) -> Dict:
+        """The last run's stats, or a schema-valid zero record before any
+        run — ``service.stats["drops"]`` never raises on a fresh service
+        (the old ``None`` footgun)."""
+        if self.last_run is not None and self.last_run.stats is not None:
+            return self.last_run.stats
+        return empty_stats()
 
     def _finish(self, rec: ServiceRun, asm: IntervalAssembler, ready,
                 crashed: bool, stranded: int = 0,
                 source: Optional[Dict] = None, error=None, plane=None,
                 chunks: Optional[List[Dict]] = None, controller=None,
-                hung_thread: bool = False):
+                hung_thread: bool = False, advisory=None):
+        """Publish the run's accounting into the telemetry registry, then
+        render ``rec.stats`` as the legacy compatibility view over its
+        snapshot (DESIGN.md §2.11) — the registry is the source of truth,
+        the merged dict a projection of it."""
+        tele = rec.telemetry
         interval = self.cfg.punct_interval
         unprocessed = (len(ready) + stranded) * interval + asm.pending
+        tele.count("service.arrived", asm.arrived + rec.admission_dropped)
+        tele.count("service.processed", len(rec.outputs) * interval)
+        tele.count("service.replayed", rec.replayed_intervals * interval)
+        tele.count("service.late_rerouted", asm.late_rerouted)
+        tele.count("service.drops", asm.watermark_dropped, kind="watermark")
+        tele.count("service.drops", rec.admission_dropped, kind="admission")
+        tele.count("service.drops", rec.exchange_dropped, kind="exchange")
+        tele.count("service.unprocessed", unprocessed)
+        tele.gauge("service.watermark", int(asm.watermark))
+        tele.gauge("service.crashed", int(crashed))
+        asm.publish(tele)
+
         srcstats = dict(source or {})
         backfill = ((srcstats.get("retries", 0)
                      + srcstats.get("deadline_misses", 0))
                     / max(srcstats.get("pulls", 0), 1))
-        srcstats["backfill_ratio"] = backfill
-        srcstats["alarm_threshold"] = self.cfg.straggler.max_backfill_ratio
-        srcstats["alarm"] = backfill > self.cfg.straggler.max_backfill_ratio
-        rec.stats = dict(
-            arrived=asm.arrived + rec.admission_dropped,
-            processed=len(rec.outputs) * interval,
-            replayed=rec.replayed_intervals * interval,
-            late_rerouted=asm.late_rerouted,
-            drops=dict(watermark=asm.watermark_dropped,
-                       admission=rec.admission_dropped,
-                       exchange=rec.exchange_dropped),
-            unprocessed=unprocessed,
-            snapshots=list(rec.snapshots),
-            watermark=int(asm.watermark),
-            crashed=crashed,
-            assembly=asm.ledger,
-            source=srcstats,
-        )
+        tele.count("source.pulls", srcstats.get("pulls", 0))
+        tele.count("source.retries", srcstats.get("retries", 0))
+        tele.count("source.deadline_misses",
+                   srcstats.get("deadline_misses", 0))
+        tele.count("source.backoff_s", srcstats.get("backoff_s", 0.0))
+        tele.gauge("source.backfill_ratio", backfill)
+        tele.gauge("source.alarm_threshold",
+                   self.cfg.straggler.max_backfill_ratio)
+        tele.gauge("source.alarm",
+                   int(backfill > self.cfg.straggler.max_backfill_ratio))
+
+        tele.ensure_records("snapshots")
+        for s in rec.snapshots:
+            tele.record("snapshots", step=int(s))
         # per-chunk time series (ring-bounded, newest last): the
         # controller's observation window, published for benchmarks and
         # post-mortems alike
         rec.chunk_records = [dict(r) for r in (chunks or [])]
-        rec.stats["chunks"] = rec.chunk_records
+        tele.ensure_records("chunks")
+        for r in rec.chunk_records:
+            tele.record_doc("chunks", dict(r))
+        tele.observe_many("latency.event_s", rec.latency_s())
+        tele.observe_many("latency.chunk_s",
+                          [r["lat_s"] for r in rec.chunk_records])
+
         if controller is not None:
-            rec.stats["controller"] = dict(
+            tele.record_doc("controller", dict(
                 init_plan=controller.init_plan.as_dict(),
                 plan=controller.plan.as_dict(),
-                decisions=[dict(d) for d in controller.trace],
-                escalations=controller.esc_done)
+                escalations=controller.esc_done))
+            tele.ensure_records("decisions")
+            for d in controller.trace:
+                tele.record_doc("decisions", dict(d))
+            if advisory is not None:
+                tele.ensure_records("advisory")
         if error is not None:
-            rec.stats["error"] = dict(
+            tele.record_doc("error", dict(
                 type=type(error).__name__, msg=str(error),
-                hung_thread=hung_thread, **getattr(error, "info", {}))
+                hung_thread=hung_thread, **getattr(error, "info", {})))
         if plane is not None:
-            rec.stats["faults"] = list(plane.fired)
+            plane.publish(tele)
         if self.engine._sharded is not None:
-            rec.stats["exchange"] = dict(
-                dropped=rec.exchange_dropped,
-                shipped=rec.exchange_shipped,
-                capacity=rec.exchange_capacity,
-                escalations=(controller.esc_done
-                             if controller is not None else 0),
-                slack=self.engine._sharded.exchange_slack)
+            tele.count("exchange.dropped", rec.exchange_dropped)
+            tele.count("exchange.shipped", rec.exchange_shipped)
+            tele.gauge("exchange.capacity", rec.exchange_capacity)
+            tele.gauge("exchange.escalations",
+                       controller.esc_done if controller is not None else 0)
+            tele.gauge("exchange.slack",
+                       self.engine._sharded.exchange_slack)
             # skew-aware placement ledger: observed load per ownership
             # shard over the whole run, its imbalance ratio (max/mean),
             # and every live migration the controller applied
             sh = rec.shard_events
             tot = int(sh.sum()) if sh is not None else 0
-            rec.stats["placement"] = dict(
+            tele.record_doc("placement", dict(
                 shard_events=([int(v) for v in sh]
                               if sh is not None else []),
                 imbalance=(float(int(sh.max()) * sh.size / tot)
                            if tot else 1.0),
-                migrations=[dict(m) for m in rec.migrations],
-                moved_rows=int(sum(m["moved"] for m in rec.migrations)),
                 owners=[[int(u), int(o)]
-                        for (u, o) in self.engine.owners])
+                        for (u, o) in self.engine.owners]))
+            tele.ensure_records("migrations")
+            for m in rec.migrations:
+                tele.record_doc("migrations", dict(m))
+        rec.stats = stats_view(tele.snapshot())
         if not crashed:
-            self._log_once(rec.stats)
+            self._log_events(tele, rec.stats)
 
     @staticmethod
-    def _log_once(stats: Dict):
-        """One line per nonzero drop category per run — never per interval."""
+    def _log_events(tele: Telemetry, stats: Dict):
+        """One structured event per nonzero drop category per run — never
+        per interval.  ``tele.event`` rate-limits (limit=1 per registry,
+        i.e. per run) and counts every occurrence in the snapshot."""
         drops = stats["drops"]
         if drops["watermark"]:
-            log.warning("watermark policy dropped %d late events this run",
-                        drops["watermark"])
+            tele.event("drops.watermark",
+                       "watermark policy dropped %d late events this run",
+                       drops["watermark"], logger=log)
         if drops["admission"]:
-            log.warning("admission control dropped %d events at the full "
-                        "queue this run", drops["admission"])
+            tele.event("drops.admission",
+                       "admission control dropped %d events at the full "
+                       "queue this run", drops["admission"], logger=log)
         if drops["exchange"]:
-            log.warning("sharded exchange overflow dropped %d ops this run "
-                        "(capacity=%d/bucket) — raise exchange_slack",
-                        drops["exchange"], stats["exchange"]["capacity"])
+            tele.event("drops.exchange",
+                       "sharded exchange overflow dropped %d ops this run "
+                       "(capacity=%d/bucket) — raise exchange_slack",
+                       drops["exchange"], stats["exchange"]["capacity"],
+                       logger=log)
         if stats["late_rerouted"]:
-            log.info("%d late events rerouted into later intervals this run",
-                     stats["late_rerouted"])
+            tele.event("late.rerouted",
+                       "%d late events rerouted into later intervals this "
+                       "run", stats["late_rerouted"], logger=log,
+                       level=logging.INFO)
         src = stats.get("source") or {}
         if src.get("alarm"):
-            log.warning(
+            tele.event(
+                "source.straggler_alarm",
                 "source backfill ratio %.2f exceeded the straggler alarm "
                 "threshold %.2f this run (%d retries, %d deadline misses "
                 "over %d pulls)", src["backfill_ratio"],
                 src["alarm_threshold"], src.get("retries", 0),
-                src.get("deadline_misses", 0), src.get("pulls", 0))
+                src.get("deadline_misses", 0), src.get("pulls", 0),
+                logger=log)
